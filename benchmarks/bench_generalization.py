@@ -1,0 +1,73 @@
+"""Paper Fig. 3: generalization score-loss across objectives.
+
+For each objective in {ela, edp, e, l}: joint search + per-workload
+separate searches from the SAME seeded initial population; normalize
+scores to the joint best; report the % score loss of the generalized
+design vs each workload-specific design, and the joint convergence curve.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.core.objectives import OBJECTIVES
+from repro.core.search import run_search, seed_population
+from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+from repro.workloads.pack import pack_workloads
+
+POP, GENS, TOPK = 40, 10, 10
+AREA = 150.0
+
+
+def run(seed: int = 0, verbose: bool = True) -> dict:
+    ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    key = jax.random.PRNGKey(seed)
+    init = seed_population(key, ws, POP)  # same initial architectures for all
+    out = {}
+
+    for obj in OBJECTIVES:
+        t0 = time.time()
+        joint = run_search(
+            jax.random.PRNGKey(seed + 7), ws,
+            objective=obj, area_constr=AREA,
+            pop_size=POP, generations=GENS, top_k=TOPK,
+            init_genomes=init,
+        )
+        jbest = float(joint.top_scores[0]) if len(joint.top_scores) else float("inf")
+        losses: Dict[str, float] = {}
+        for i, name in enumerate(ws.names):
+            sep = run_search(
+                jax.random.PRNGKey(seed + 7), ws.subset([i]),
+                objective=obj, area_constr=AREA,
+                pop_size=POP, generations=GENS, top_k=TOPK,
+                init_genomes=init,
+            )
+            if len(sep.top_scores):
+                # loss of generality: how much worse the generalized chip is
+                # on THIS workload than its workload-specific optimum.
+                from benchmarks.bench_joint_vs_separate import per_workload_scores
+
+                joint_on_w = per_workload_scores(joint.top_genomes[0], ws, AREA)[name]
+                losses[name] = 1.0 - float(sep.top_scores[0]) / joint_on_w \
+                    if np.isfinite(joint_on_w) else float("nan")
+        out[obj] = {
+            "joint_best": jbest,
+            "joint_top10_norm": [float(s) / jbest for s in joint.top_scores],
+            "convergence": [float(c) for c in joint.convergence],
+            "generalization_loss": losses,
+            "wall_s": time.time() - t0,
+        }
+        if verbose:
+            print(f"[fig3 {obj:4s}] joint best {jbest:.3g}; loss vs specific: "
+                  f"{ {k: f'{v:.0%}' for k, v in losses.items()} }")
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    with open("experiments/fig3_generalization.json", "w") as f:
+        json.dump(res, f, indent=1)

@@ -1,0 +1,78 @@
+"""Kernel parity + micro-bench: Pallas (interpret) vs jnp reference.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-times are NOT TPU numbers — parity (max |err|) is the deliverable
+here; TPU timing comes from the roofline analysis of the compiled cells.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bench_imc_eval(verbose=True):
+    from repro.core import space
+    from repro.imc.cost import evaluate_designs
+    from repro.kernels.imc_eval.ops import evaluate_designs_kernel
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    g = space.random_genomes(jax.random.PRNGKey(0), 512)
+    d = space.decode(g)
+    r_ref = evaluate_designs(d, ws)
+    r_pal = evaluate_designs_kernel(d, ws, backend="pallas", interpret=True)
+    err = float(jnp.max(jnp.abs(r_pal.energy_pj - r_ref.energy_pj)
+                        / (jnp.abs(r_ref.energy_pj) + 1e-9)))
+    if verbose:
+        print(f"[kern] imc_eval  pallas-vs-ref rel err {err:.2e}")
+    return {"kernel": "imc_eval", "rel_err": err}
+
+
+def bench_flash(verbose=True):
+    from repro.kernels.flash_attention import ops as fa
+    from repro.kernels.flash_attention.ref import attention_reference
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 256, 8, 64))
+    k = jax.random.normal(key, (2, 256, 2, 64))
+    v = jax.random.normal(key, (2, 256, 2, 64))
+    o_p = fa.flash_attention(q, k, v, causal=True)
+    o_r = attention_reference(q, k, v, causal=True)
+    err = float(jnp.abs(o_p - o_r).max())
+    if verbose:
+        print(f"[kern] flash_attention  pallas-vs-ref max err {err:.2e}")
+    return {"kernel": "flash_attention", "max_err": err}
+
+
+def bench_ssd(verbose=True):
+    from repro.kernels.ssd_scan import ops, ref
+
+    key = jax.random.PRNGKey(0)
+    B, S, H, P, N = 2, 256, 4, 64, 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, 1, N))
+    Cm = jax.random.normal(ks[4], (B, S, 1, N))
+    y_p, h_p = ops.ssd_chunked(x, dt, A, Bm, Cm)
+    y_r, h_r = ref.ssd_chunked(x, dt, A, Bm, Cm)
+    err = float(jnp.abs(y_p - y_r).max())
+    if verbose:
+        print(f"[kern] ssd_scan  pallas-vs-ref max err {err:.2e}")
+    return {"kernel": "ssd_scan", "max_err": err}
+
+
+def run(verbose: bool = True) -> list:
+    return [bench_imc_eval(verbose), bench_flash(verbose), bench_ssd(verbose)]
+
+
+if __name__ == "__main__":
+    res = run()
+    with open("experiments/kernels.json", "w") as f:
+        json.dump(res, f, indent=1)

@@ -1,0 +1,76 @@
+"""Search-throughput benchmark (paper Sec. IV: ~4 h for P=40 x G=10 on 64
+CPU cores == ~36 s per design evaluated).
+
+Measures:
+  * vectorized evaluator throughput (designs/s) at several population
+    sizes — the jnp path and the Pallas imc_eval kernel (interpret mode
+    on CPU; compiled-TPU numbers are the target),
+  * full GA generation throughput (eval + select + SBX + mutate, jitted).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import space
+from repro.core.ga import run_ga
+from repro.core.objectives import make_objective
+from repro.core.search import make_eval_fn, seed_population
+from repro.imc.cost import evaluate_designs
+from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+from repro.workloads.pack import pack_workloads
+
+PAPER_S_PER_DESIGN = 36.0
+
+
+def _time(f, *args, n=3):
+    f(*args)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / n
+
+
+def run(verbose: bool = True) -> dict:
+    ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    obj = make_objective("ela", 150.0)
+    out = {"paper_s_per_design": PAPER_S_PER_DESIGN, "eval": [], "ga": []}
+
+    @jax.jit
+    def eval_pop(genomes):
+        return obj(evaluate_designs(space.decode(genomes), ws))
+
+    for pop in (40, 1024, 16384):
+        g = space.random_genomes(jax.random.PRNGKey(0), pop)
+        dt = _time(eval_pop, g)
+        rate = pop / dt
+        out["eval"].append({"pop": pop, "s": dt, "designs_per_s": rate,
+                            "speedup_vs_paper": rate * PAPER_S_PER_DESIGN})
+        if verbose:
+            print(f"[thru] eval pop={pop:6d}: {rate:9.0f} designs/s "
+                  f"({rate * PAPER_S_PER_DESIGN:.0f}x paper)")
+
+    eval_fn = make_eval_fn(ws, "ela", 150.0)
+    init = seed_population(jax.random.PRNGKey(1), ws, 40)
+    def ga_run():
+        return run_ga(jax.random.PRNGKey(2), eval_fn, pop_size=40,
+                      generations=10, init_genomes=init).best_score
+    dt = _time(ga_run, n=2)
+    n_designs = 40 * 11
+    out["ga"].append({"pop": 40, "gens": 10, "s": dt,
+                      "designs_per_s": n_designs / dt})
+    if verbose:
+        print(f"[thru] full GA (P=40, G=10): {dt:.2f}s total "
+              f"(paper: ~14,400s) -> {14400/dt:.0f}x end-to-end")
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    with open("experiments/throughput.json", "w") as f:
+        json.dump(res, f, indent=1)

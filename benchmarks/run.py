@@ -1,0 +1,57 @@
+"""Benchmark entry point — one bench per paper table/figure + kernels.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Writes machine-readable results under experiments/ and prints a summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+EXP = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="1 seed instead of 5")
+    args = ap.parse_args(argv)
+    EXP.mkdir(exist_ok=True)
+
+    from benchmarks import (
+        bench_generalization,
+        bench_joint_vs_separate,
+        bench_kernels,
+        bench_throughput,
+    )
+
+    t0 = time.time()
+    print("== kernels (parity) ==")
+    kern = bench_kernels.run()
+    with open(EXP / "kernels.json", "w") as f:
+        json.dump(kern, f, indent=1)
+
+    print("\n== throughput (paper Sec. IV: 36 s/design) ==")
+    thru = bench_throughput.run()
+    with open(EXP / "throughput.json", "w") as f:
+        json.dump(thru, f, indent=1)
+
+    print("\n== Fig. 2: joint vs separate ==")
+    fig2 = bench_joint_vs_separate.run(seeds=1 if args.quick else 5)
+    with open(EXP / "fig2_joint_vs_separate.json", "w") as f:
+        json.dump(fig2, f, indent=1)
+
+    print("\n== Fig. 3: generalization loss across objectives ==")
+    fig3 = bench_generalization.run()
+    with open(EXP / "fig3_generalization.json", "w") as f:
+        json.dump(fig3, f, indent=1)
+
+    print(f"\nall benches done in {time.time()-t0:.0f}s; results in {EXP}/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,134 @@
+"""Post-optimization HLO analysis: collective traffic, op census.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes accessed but NOT
+collective traffic, so we parse the optimized HLO text and sum operand
+sizes of every communication op:
+
+    all-gather, all-reduce, reduce-scatter, all-to-all, collective-permute
+    (+ their -start async forms; -done forms carry no new payload)
+
+Sizes are per-device payload bytes (the HLO module is the single-device
+SPMD program; an operand shape is the per-device shard).  We also record
+per-collective-kind byte totals and an op census (how many fusions,
+convolutions/dots, etc.) used by the perf iteration loop to spot redundant
+gathers and layout churn.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "token": 0,
+    "opaque": 0,
+}
+
+# bf16[128,4096]{1,0:T(8,128)(2,1)}  /  f32[]  /  (bf16[2,4], f32[8])
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^=]*\)|\S+)\s+([\w\-]+)\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of one (possibly tuple) HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int
+    by_kind: Dict[str, int]
+    counts: Dict[str, int]
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: {self.counts.get(k, 0)}x {self.by_kind.get(k, 0) / 1e6:.1f}MB"
+            for k in COLLECTIVE_KINDS
+            if self.counts.get(k, 0)
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum per-device payload (result-shape bytes) of every collective.
+
+    We use the *result* shape: for all-reduce it equals the operand; for
+    all-gather it is the gathered (larger) buffer — the bytes that actually
+    traverse links per device in a ring implementation; for reduce-scatter
+    the operand is larger, so we take max(result, heuristic) by parsing the
+    operand list too would need full parsing — result-shape is the standard
+    proxy and is what we report consistently across cells.
+    """
+    by_kind: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind, is_start = m.group(1), m.group(2), m.group(3)
+        if is_start and kind == "all-reduce":
+            # all-reduce-start result repeats the shape; count once
+            pass
+        b = shape_bytes(shape_str)
+        if kind == "all-reduce" and is_start:
+            b //= 2  # start returns (operand, result) tuple: same payload twice
+        by_kind[kind] += b
+        counts[kind] += 1
+    return CollectiveStats(
+        total_bytes=sum(by_kind.values()),
+        by_kind=dict(by_kind),
+        counts=dict(counts),
+    )
+
+
+def op_census(hlo_text: str) -> Counter:
+    c: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m:
+            c[m.group(1)] += 1
+    return c
+
+
+def largest_collectives(hlo_text: str, k: int = 8) -> List[Tuple[str, int]]:
+    """The k biggest individual collective ops (kind, bytes) — hillclimb aid."""
+    out: List[Tuple[str, int]] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        out.append((m.group(2), shape_bytes(m.group(1))))
+    out.sort(key=lambda t: -t[1])
+    return out[:k]

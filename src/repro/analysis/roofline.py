@@ -1,0 +1,129 @@
+"""Roofline model for the TPU v5e-class target.
+
+Three terms per (arch x shape x mesh) cell, all in seconds:
+
+    compute    = HLO_FLOPs_per_device  / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device  / HBM_bandwidth_per_chip
+    collective = collective_bytes_per_device / (links x link_bandwidth)
+
+``compiled.cost_analysis()`` reports the per-device SPMD module, so its
+flops/bytes are already per-chip — no further division by chip count.
+Collective bytes come from the optimized HLO text (``analysis.hlo``).
+
+The useful-compute ratio compares the analytic model FLOPs
+(6·N_active·D for training, 2·N_active·tokens for inference) against the
+compiled total — catching remat recompute and sharding-induced redundancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.analysis.hlo import CollectiveStats
+
+# ---- hardware constants (TPU v5e-class target) ------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS = 2                # usable links on a 2D-torus axis-pair (conservative)
+HBM_GB = 16.0                # v5e HBM capacity
+
+
+@dataclasses.dataclass
+class Roofline:
+    cell: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_global: float      # analytic 6ND / 2ND
+    useful_ratio: float            # model_flops / (hlo_flops x chips)
+    peak_fraction: float           # t_compute / max(all terms) -> roofline frac
+    mem_per_device_gb: float = 0.0
+    collectives: Optional[Dict[str, int]] = None
+
+    def table_row(self) -> str:
+        return (
+            f"| {self.cell} | {self.mesh} | {self.t_compute*1e3:.2f} | "
+            f"{self.t_memory*1e3:.2f} | {self.t_collective*1e3:.2f} | "
+            f"{self.bottleneck} | {self.useful_ratio:.2f} | "
+            f"{self.peak_fraction:.2%} |"
+        )
+
+
+def roofline_terms(
+    *,
+    cell: str,
+    mesh_name: str,
+    chips: int,
+    hlo_flops: float,
+    hlo_bytes: float,
+    coll: CollectiveStats,
+    model_flops_global: float,
+    mem_per_device: float = 0.0,
+) -> Roofline:
+    t_c = hlo_flops / PEAK_FLOPS
+    t_m = hlo_bytes / HBM_BW
+    t_x = coll.total_bytes / (ICI_LINKS * ICI_BW)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    worst = max(terms.values())
+    useful = model_flops_global / max(hlo_flops * chips, 1.0)
+    return Roofline(
+        cell=cell,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=hlo_flops,
+        bytes_per_device=hlo_bytes,
+        collective_bytes=coll.total_bytes,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops_global=model_flops_global,
+        useful_ratio=useful,
+        peak_fraction=t_c / worst if worst > 0 else 0.0,
+        mem_per_device_gb=mem_per_device / 1e9,
+        collectives=dict(coll.by_kind),
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 'useful' FLOPs per step for the cell (global, not per-chip).
+
+    train:    6 * N_active * tokens   (fwd 2ND + bwd 4ND)
+    prefill:  2 * N_active * tokens
+    decode:   2 * N_active * batch    (one token per sequence)
+    plus attention-score FLOPs where attention exists (often dominant at 32k).
+    """
+    n_act = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens, mult = B * S, 6.0
+    elif shape.kind == "prefill":
+        tokens, mult = B * S, 2.0
+    else:
+        tokens, mult = B * 1, 2.0
+    base = mult * n_act * tokens
+
+    # attention score+value FLOPs: 2 * 2 * H * Dh * Sq * Skv_eff per layer
+    n_attn = sum(1 for m, _ in cfg.layer_plan() if m == "attn") * cfg.n_blocks
+    if cfg.is_encdec:
+        n_attn += cfg.encoder_layers + cfg.n_layers  # enc self + dec cross
+    if n_attn and cfg.n_heads:
+        H, Dh = cfg.n_heads, cfg.head_dim_
+        if shape.kind == "train" or shape.kind == "prefill":
+            skv = min(S, cfg.sliding_window) if cfg.sliding_window else S
+            # causal halves the average effective kv length
+            att = 4.0 * H * Dh * S * (skv / 2 if not cfg.sliding_window else skv) * B
+            att *= 3.0 if shape.kind == "train" else 1.0
+        else:
+            skv = min(S, cfg.sliding_window) if cfg.sliding_window else S
+            att = 4.0 * H * Dh * 1 * skv * B
+        base += att * n_attn
+    return base

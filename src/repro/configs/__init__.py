@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    SHAPES_BY_NAME,
+    ModelConfig,
+    ShapeSpec,
+    get_config,
+    list_configs,
+)

@@ -1,0 +1,19 @@
+"""The paper's contribution: joint hardware-workload DSE for IMC chips.
+
+* ``space``      — the ~1.9e7-config hardware search space + genome codec
+* ``ga``         — SBX + polynomial-mutation GA as one XLA program
+* ``objectives`` — f(E_w, L_w, A) s.t. A <= A_constr families
+* ``search``     — joint / separate drivers, seeding, cross-rescoring
+* ``distributed``— population evaluation sharded over the mesh
+"""
+from repro.core import space  # noqa: F401
+from repro.core.ga import GAResult, run_ga  # noqa: F401
+from repro.core.objectives import OBJECTIVES, make_objective  # noqa: F401
+from repro.core.search import (  # noqa: F401
+    SearchResult,
+    joint_search,
+    rescore_designs,
+    run_search,
+    seed_population,
+    separate_search,
+)

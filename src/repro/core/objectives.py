@@ -1,0 +1,60 @@
+"""Objective functions f(E_w, L_w, A) s.t. A <= A_constr  (paper Eq. 1).
+
+The *joint* part: metrics reduce with `max` over the workload axis — one
+chip must serve the worst-case workload well.  Failed/invalid designs score
++inf (the GA can sample them; they never survive).
+
+Four objective families (paper Fig. 3 evaluates several):
+  ela   : max(E) * max(L) * A           (energy-latency-area, the headline)
+  edp   : max(E) * max(L)               (energy-delay product)
+  e     : max(E)
+  l     : max(L)
+all under the area constraint.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.imc.cost import EvalResult
+
+INF = jnp.float32(jnp.inf)
+
+
+def _joint(x: jnp.ndarray) -> jnp.ndarray:
+    """(P, W) -> (P,) worst-case over the workload set."""
+    return x.max(axis=-1)
+
+
+def make_objective(kind: str, area_constr_mm2: float = 150.0) -> Callable[[EvalResult], jnp.ndarray]:
+    """Score (lower is better), +inf when infeasible."""
+
+    def score(r: EvalResult) -> jnp.ndarray:
+        e = _joint(r.energy_pj)
+        l = _joint(r.latency_ns)
+        a = r.area_mm2
+        if kind == "ela":
+            s = e * l * a
+        elif kind == "edp":
+            s = e * l
+        elif kind == "e":
+            s = e
+        elif kind == "l":
+            s = l
+        else:
+            raise ValueError(kind)
+        feasible = r.fits.all(axis=-1) & r.valid & (a <= area_constr_mm2)
+        return jnp.where(feasible, s, INF)
+
+    score.kind = kind
+    score.area_constr = area_constr_mm2
+    return score
+
+
+OBJECTIVES = ("ela", "edp", "e", "l")
+
+
+def rescore(r: EvalResult, kind: str, area_constr_mm2: float = 150.0) -> jnp.ndarray:
+    """Re-evaluate stored designs under a different objective/workload set."""
+    return make_objective(kind, area_constr_mm2)(r)

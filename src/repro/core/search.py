@@ -1,0 +1,199 @@
+"""Joint / separate hardware-workload search drivers (paper Sec. III-A, IV).
+
+``joint_search``    — one GA over the full workload set (the paper's method):
+                      objective reduces metrics with max over workloads.
+``separate_search`` — the baseline: one GA per single workload.
+``rescore_designs`` — re-evaluate any designs on any workload set/objective
+                      (used for the paper's "failed designs" analysis and
+                      for fair joint-vs-separate comparison).
+``seed_population`` — initial population sampling with the paper's rule:
+                      configs that cannot fit the *largest* workload are
+                      discarded up front.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import space
+from repro.core.ga import GAResult, run_ga
+from repro.core.objectives import make_objective
+from repro.imc.cost import DesignArrays, EvalResult, evaluate_designs
+from repro.imc.tech import TECH, TechParams
+from repro.workloads.pack import WorkloadSet
+
+
+@dataclasses.dataclass
+class SearchResult:
+    workload_names: Tuple[str, ...]
+    objective: str
+    ga: GAResult
+    top_designs: List[Dict[str, float]]  # decoded, deduped, best-first
+    top_scores: np.ndarray
+    top_genomes: np.ndarray
+    convergence: np.ndarray  # best-so-far score per generation
+
+
+def make_eval_fn(
+    ws: WorkloadSet,
+    objective: str,
+    area_constr: float,
+    tech: TechParams = TECH,
+    *,
+    backend: str = "jnp",
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """backend: "jnp" (portable) or "pallas" (the imc_eval TPU kernel;
+    interpret-mode on CPU — numerically identical, see tests)."""
+    obj = make_objective(objective, area_constr)
+
+    if backend == "pallas":
+        from repro.kernels.imc_eval.ops import evaluate_designs_kernel
+
+        def eval_fn(genomes: jnp.ndarray) -> jnp.ndarray:
+            return obj(evaluate_designs_kernel(space.decode(genomes), ws, tech))
+
+        return eval_fn
+
+    def eval_fn(genomes: jnp.ndarray) -> jnp.ndarray:
+        return obj(evaluate_designs(space.decode(genomes), ws, tech))
+
+    return eval_fn
+
+
+def largest_workload_index(ws: WorkloadSet) -> int:
+    """Largest = most crossbar demand at a reference design (most weights)."""
+    weights = (ws.feats[..., 1] * ws.feats[..., 2] * ws.feats[..., 5] * ws.mask).sum(-1)
+    return int(jnp.argmax(weights))
+
+
+def seed_population(
+    key: jax.Array,
+    ws: WorkloadSet,
+    pop_size: int,
+    *,
+    tech: TechParams = TECH,
+    oversample: int = 64,
+    max_rounds: int = 8,
+) -> jnp.ndarray:
+    """Random init; designs failing the largest workload (or V/f-invalid)
+    are discarded (paper Sec. III-C)."""
+    wl = ws.subset([largest_workload_index(ws)])
+    found: List[np.ndarray] = []
+    for _ in range(max_rounds):
+        key, k = jax.random.split(key)
+        cand = space.random_genomes(k, pop_size * oversample)
+        r = evaluate_designs(space.decode(cand), wl, tech)
+        ok = np.asarray(r.fits[:, 0] & r.valid)
+        found.append(np.asarray(cand)[ok])
+        if sum(len(f) for f in found) >= pop_size:
+            break
+    pool = np.concatenate(found, axis=0)
+    if len(pool) < pop_size:
+        raise RuntimeError(
+            f"could not seed {pop_size} valid designs ({len(pool)} found); "
+            "largest workload may not fit anywhere in the search space"
+        )
+    return jnp.asarray(pool[:pop_size])
+
+
+def _top_unique(
+    genomes: np.ndarray, scores: np.ndarray, k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Best-k designs, unique in *decoded grid index* space."""
+    idx = np.asarray(space.decode_indices(jnp.asarray(genomes)))
+    order = np.argsort(scores)
+    seen = set()
+    keep = []
+    for i in order:
+        if not np.isfinite(scores[i]):
+            break
+        t = tuple(idx[i])
+        if t in seen:
+            continue
+        seen.add(t)
+        keep.append(i)
+        if len(keep) == k:
+            break
+    keep = np.array(keep, np.int64) if keep else np.zeros((0,), np.int64)
+    return genomes[keep], scores[keep]
+
+
+def run_search(
+    key: jax.Array,
+    ws: WorkloadSet,
+    *,
+    objective: str = "ela",
+    area_constr: float = 150.0,
+    pop_size: int = 40,
+    generations: int = 10,
+    top_k: int = 10,
+    init_genomes: Optional[jnp.ndarray] = None,
+    tech: TechParams = TECH,
+    backend: str = "jnp",
+) -> SearchResult:
+    k_seed, k_ga = jax.random.split(key)
+    if init_genomes is None:
+        init_genomes = seed_population(k_seed, ws, pop_size, tech=tech)
+    eval_fn = make_eval_fn(ws, objective, area_constr, tech, backend=backend)
+    ga = run_ga(
+        k_ga,
+        eval_fn,
+        pop_size=pop_size,
+        generations=generations,
+        init_genomes=init_genomes,
+    )
+    G1, P, n = ga.genomes.shape
+    flat_g = np.asarray(ga.genomes).reshape(-1, n)
+    flat_s = np.asarray(ga.scores).reshape(-1)
+    top_g, top_s = _top_unique(flat_g, flat_s, top_k)
+    designs = space.decode(jnp.asarray(top_g)) if len(top_g) else None
+    top_designs = [
+        space.design_dict(designs, i) for i in range(len(top_g))
+    ] if designs is not None else []
+    conv = np.minimum.accumulate(np.asarray(ga.scores).min(axis=1))
+    return SearchResult(
+        workload_names=ws.names,
+        objective=objective,
+        ga=ga,
+        top_designs=top_designs,
+        top_scores=top_s,
+        top_genomes=top_g,
+        convergence=conv,
+    )
+
+
+def joint_search(key, ws: WorkloadSet, **kw) -> SearchResult:
+    return run_search(key, ws, **kw)
+
+
+def separate_search(
+    key, ws: WorkloadSet, *, share_init: Optional[jnp.ndarray] = None, **kw
+) -> Dict[str, SearchResult]:
+    """One single-workload GA per workload (the paper's baseline)."""
+    out = {}
+    for i, name in enumerate(ws.names):
+        key, k = jax.random.split(key)
+        out[name] = run_search(
+            k, ws.subset([i]), init_genomes=share_init, **kw
+        )
+    return out
+
+
+def rescore_designs(
+    genomes: np.ndarray,
+    ws: WorkloadSet,
+    *,
+    objective: str = "ela",
+    area_constr: float = 150.0,
+    tech: TechParams = TECH,
+) -> Tuple[np.ndarray, EvalResult]:
+    """Scores + full metrics of given designs on a (possibly different)
+    workload set — the paper's cross-evaluation."""
+    g = jnp.asarray(genomes)
+    r = evaluate_designs(space.decode(g), ws, tech)
+    s = make_objective(objective, area_constr)(r)
+    return np.asarray(s), r

@@ -1,0 +1,73 @@
+"""The paper's hardware search space (~1.9e7 configurations).
+
+Nine discrete parameters (paper Fig. 1 / Sec. III-B).  The genome is a
+continuous relaxation: 9 genes in [0, 1), decoded per-gene to a grid index
+(exactly how pymoo treats integer grids under SBX/polynomial mutation [33]).
+
+Grid sizes multiply to 5*5*5*4*6 * 20 * 4 * 8 * 10 = 19,200,000 ~ 1.9e7,
+matching the paper's stated search-space size.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.imc.cost import DesignArrays
+
+# name -> grid of values (ordered)
+SPACE: Dict[str, np.ndarray] = {
+    "rows": np.array([32, 64, 128, 256, 512], np.float32),
+    "cols": np.array([32, 64, 128, 256, 512], np.float32),
+    "c_per_tile": np.array([2, 4, 8, 16, 32], np.float32),
+    "t_per_router": np.array([2, 4, 8, 16], np.float32),
+    "g_per_chip": np.array([2, 4, 8, 16, 32, 64], np.float32),
+    "v_op": np.round(np.arange(0.70, 1.20, 0.025), 3).astype(np.float32),  # 20
+    "bits_cell": np.array([1, 2, 3, 4], np.float32),
+    "t_cycle_ns": np.array([0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 4.0, 8.0], np.float32),
+    "glb_mb": np.array(
+        [0.125, 0.25, 0.5, 0.75, 1.0, 2.0, 3.0, 4.0, 8.0, 16.0], np.float32
+    ),
+}
+
+FIELDS: Tuple[str, ...] = tuple(DesignArrays._fields)
+assert set(SPACE) == set(FIELDS), (set(SPACE), set(FIELDS))
+N_GENES = len(FIELDS)
+GRID_SIZES = np.array([len(SPACE[f]) for f in FIELDS], np.int32)
+SPACE_SIZE = int(np.prod(GRID_SIZES.astype(np.int64)))
+
+_GRIDS = [jnp.asarray(SPACE[f]) for f in FIELDS]
+
+
+def decode(genomes: jnp.ndarray) -> DesignArrays:
+    """(P, 9) floats in [0,1) -> decoded design value arrays (each (P,))."""
+    cols = []
+    for i, grid in enumerate(_GRIDS):
+        n = grid.shape[0]
+        idx = jnp.clip((genomes[:, i] * n).astype(jnp.int32), 0, n - 1)
+        cols.append(grid[idx])
+    return DesignArrays(*cols)
+
+
+def decode_indices(genomes: jnp.ndarray) -> jnp.ndarray:
+    """(P, 9) -> integer grid indices (P, 9)."""
+    out = []
+    for i, grid in enumerate(_GRIDS):
+        n = grid.shape[0]
+        out.append(jnp.clip((genomes[:, i] * n).astype(jnp.int32), 0, n - 1))
+    return jnp.stack(out, axis=1)
+
+
+def genome_from_indices(idx: np.ndarray) -> np.ndarray:
+    """Integer indices (P, 9) -> genome centered in each grid cell."""
+    return (np.asarray(idx, np.float64) + 0.5) / GRID_SIZES[None, :]
+
+
+def design_dict(d: DesignArrays, i: int) -> Dict[str, float]:
+    return {f: float(getattr(d, f)[i]) for f in FIELDS}
+
+
+def random_genomes(key: jax.Array, n: int) -> jnp.ndarray:
+    return jax.random.uniform(key, (n, N_GENES))

@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (  # noqa: F401
+    LOGICAL_RULES,
+    batch_axes,
+    cache_spec,
+    input_sharding,
+    make_rules,
+    named_sharding_tree,
+    params_sharding,
+)

@@ -1,0 +1,77 @@
+"""Cross-pod gradient compression: int8 quantization + error feedback.
+
+At 1000+-node scale the pod axis is a DCN-class link ~10x slower than ICI;
+the only traffic we send across it is the per-step gradient all-reduce.
+Compressing that all-reduce 4x (f32 -> int8 with per-leaf scale) cuts the
+slow-axis time proportionally; the quantization residual is carried in an
+error-feedback buffer (Karimireddy et al.-style EF21) so the optimizer
+sees an unbiased long-run gradient.
+
+Usage inside a train step (pure jittable):
+
+    comp, ef  = compress(grads + ef)          # int8 payload + new residual
+    grads     = decompress(psum(comp, "pod")) # cheap all-reduce
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Compressed(NamedTuple):
+    q: PyTree  # int8 tree
+    scale: PyTree  # f32 per-leaf scalars
+
+
+def ef_init(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads: PyTree, ef: PyTree) -> Tuple[Compressed, PyTree]:
+    """Quantize (grads + ef) to int8; return payload + new error residual."""
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return q, scale, x - deq
+
+    flat, treedef = jax.tree.flatten(grads)
+    ef_flat = treedef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat, ef_flat)]
+    return (
+        Compressed(
+            q=jax.tree.unflatten(treedef, [o[0] for o in out]),
+            scale=jax.tree.unflatten(treedef, [o[1] for o in out]),
+        ),
+        jax.tree.unflatten(treedef, [o[2] for o in out]),
+    )
+
+
+def decompress(c: Compressed) -> PyTree:
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, c.q, c.scale
+    )
+
+
+def psum_compressed(c: Compressed, axis: str, n: int) -> PyTree:
+    """all-reduce the int8 payload over `axis` (inside shard_map); the mean
+    uses int32 accumulation to avoid int8 overflow across `n` pods."""
+    summed = jax.tree.map(
+        lambda q: jax.lax.psum(q.astype(jnp.int32), axis), c.q
+    )
+    scale = jax.tree.map(lambda s: jax.lax.pmax(s, axis), c.scale)
+    return jax.tree.map(
+        lambda si, sc: si.astype(jnp.float32) * sc / n, summed, scale
+    )
+
+
+def compressed_allreduce(grads: PyTree, ef: PyTree, axis: str, n: int):
+    """One-call helper: returns (mean grads across pods, new ef)."""
+    c, new_ef = compress(grads, ef)
+    return psum_compressed(c, axis, n), new_ef

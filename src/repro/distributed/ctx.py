@@ -1,0 +1,82 @@
+"""Logical sharding context: lets model code give GSPMD activation hints
+without depending on a concrete mesh.
+
+Launchers enter ``use_rules(mesh, rules)``; model code calls
+``constrain(x, ("batch", "experts", None, None))``.  Outside any context
+(CPU tests, single device) it is a no-op, so the model stays portable.
+
+Divisibility is checked per dim — a logical name whose dim size does not
+divide the mapped mesh-axis product silently falls back to replicated for
+that dim (same policy as parameter sharding in ``models.common``).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, Any]]]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Dict[str, Any]):
+    """rules: logical name -> mesh axis (str | tuple | None)."""
+    prev = _current()
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def axis_product(mesh: Mesh, ax: Any) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(ax, 1)
+
+
+def logical_axis_size(name: str) -> int:
+    """Mesh-axis product a logical name maps to (1 when no context)."""
+    ctx = _current()
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    return axis_product(mesh, rules.get(name))
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Apply with_sharding_constraint if a context is active; else no-op."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = []
+    used: set = set()
+    for size, name in zip(x.shape, logical):
+        ax = rules.get(name) if name else None
+        if ax is None:
+            spec.append(None)
+            continue
+        axes = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+        n = axis_product(mesh, ax)
+        if n <= 1 or size % n != 0 or any(a in used for a in axes):
+            spec.append(None)
+            continue
+        used.update(axes)
+        spec.append(ax)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,147 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+One table maps every logical parameter dimension (declared next to the
+parameter in ``repro.models``) to mesh axes:
+
+* ``model`` axis — Megatron-style tensor parallelism: attention heads, FFN
+  hidden, expert dim (true EP when the expert count divides the axis,
+  expert-TP fallback otherwise — see ``common.param_specs``), SSD inner dim,
+  vocab-sharded embeddings.
+* ``data`` axis — FSDP/ZeRO-3: the ``embed`` (d_model) dim of every weight
+  is sharded over ``data``; GSPMD inserts the per-layer all-gather (fwd) and
+  reduce-scatter (bwd).
+* ``pod`` axis — pure data parallelism across pods: parameters are
+  replicated pod-to-pod, only the gradient all-reduce crosses the DCN-class
+  link (optionally int8-compressed, see ``distributed/compression.py``).
+
+Activations: batch shards over ``("pod", "data")``; decode KV caches shard
+batch over the same and *sequence* over ``model`` (flash-decode style
+partial softmax + GSPMD combine); long-context (B=1) cells shard sequence
+over ``model`` only by default — the §Perf hillclimb explores 2D
+(data×model) sequence sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.common import param_specs
+
+PyTree = Any
+
+# logical dim name -> mesh axis (tuples = multi-axis sharding)
+LOGICAL_RULES: Dict[str, Any] = {
+    "vocab": "model",
+    "embed": "data",  # FSDP: every weight's d_model dim sharded over data
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "moe_ff": "model",  # expert-TP fallback layout (E % model != 0)
+    # EP layout: experts->model, hidden->data (2D storage sharding).  The
+    # compute path explicitly gathers a BF16 copy of each layer's expert
+    # weights (see moe_ffn) — gathering the f32 masters doubles both the
+    # collective bytes and the live-buffer size.
+    "moe_ff_ep": "data",
+    "experts": "model",  # EP when divisible; else alt_logical layout kicks in
+    "ssm_inner": "model",
+    "layers": None,  # scanned stack dim stays unsharded
+    # activations (ctx.constrain): Megatron-style sequence parallelism —
+    # the inter-layer residual stream shards its seq dim over `model`
+    "seq": "model",
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes carrying the batch dim: ("pod","data") multi-pod, ("data",) single."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(mesh: Mesh, overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    rules = dict(LOGICAL_RULES)
+    rules["_mesh_sizes"] = mesh_axis_sizes(mesh)
+    rules["batch"] = batch_axes(mesh)  # activation batch dim (ctx.constrain)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def params_sharding(cfg: ModelConfig, mesh: Mesh, template: PyTree,
+                    overrides: Optional[Dict[str, Any]] = None) -> PyTree:
+    """NamedSharding tree for the param template (and, leaf-for-leaf, the
+    Adam moments)."""
+    specs = param_specs(template, make_rules(mesh, overrides))
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def named_sharding_tree(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ----------------------------------------------------------------- activations
+def input_sharding(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Dict[str, P]:
+    """PartitionSpecs for every input of the given shape cell."""
+    ba = batch_axes(mesh)
+    bspec = ba if shape.global_batch % int(np.prod([mesh_axis_sizes(mesh)[a] for a in ba])) == 0 else None
+    sh: Dict[str, P] = {}
+    if shape.kind == "train":
+        sh["inputs"] = P(bspec, None)
+        sh["targets"] = P(bspec, None)
+    elif shape.kind == "prefill":
+        sh["tokens"] = P(bspec, None)
+    else:  # decode
+        sh["token"] = P(bspec, None)
+        sh["pos"] = P(bspec)
+    if cfg.vision_tokens and shape.kind != "decode":
+        sh["vision_embeds"] = P(bspec, None, None)
+        sh["mrope_pos"] = P(None, bspec, None)
+    if cfg.is_encdec and shape.kind != "decode":
+        sh["frames"] = P(bspec, None, None)
+    return sh
+
+
+def cache_spec(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               *, seq_axis: Any = "model") -> PyTree:
+    """PartitionSpec tree matching ``transformer.cache_template``.
+
+    Attention KV: (layers, B, C, KV, Dh) — batch over ("pod","data") when it
+    divides, cache sequence over ``seq_axis`` (flash-decode); falls back per
+    dim when not divisible.  Mamba state: (layers, B, H, N, P) — batch +
+    inner heads over ``model``.
+    """
+    from repro.models.transformer import cache_template
+
+    sizes = mesh_axis_sizes(mesh)
+    ba = batch_axes(mesh)
+    nb = int(np.prod([sizes[a] for a in ba]))
+    bspec = ba if shape.global_batch % nb == 0 else None
+    m = sizes.get("model", 1)
+
+    def spec_for(path, leaf: jax.ShapeDtypeStruct) -> P:
+        key = path[-1].key  # dict key within a slot cache
+        shp = leaf.shape
+        if key in ("k", "v", "xk", "xv"):  # (L, B, C, KV, Dh)
+            seq = seq_axis if seq_axis and shp[2] % max(m, 1) == 0 else None
+            return P(None, bspec, seq, None, None)
+        if key == "ssm":  # (L, B, H, N, P)
+            h = "model" if shp[2] % m == 0 else None
+            return P(None, bspec, h, None, None)
+        if key == "conv":  # (L, B, K-1, conv_ch)
+            c = "model" if shp[3] % m == 0 else None
+            return P(None, bspec, None, c)
+        raise KeyError(key)
+
+    tmpl = cache_template(cfg, shape.global_batch, shape.seq_len)
+    return jax.tree_util.tree_map_with_path(spec_for, tmpl)

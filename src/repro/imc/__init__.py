@@ -1,0 +1,6 @@
+from repro.imc.tech import TECH, TechParams  # noqa: F401
+from repro.imc.cost import (  # noqa: F401
+    DesignArrays,
+    evaluate_designs,
+    evaluate_one,
+)

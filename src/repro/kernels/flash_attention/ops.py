@@ -1,0 +1,74 @@
+"""Jitted wrapper: (B, S, H, D)-convention flash attention via Pallas.
+
+Handles layout (seq-major -> head-major), D-padding to the 128-lane MXU
+width, and Sq/Skv padding to block multiples; drop-in for
+``repro.models.attention.flash_attention``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Skv, KV, D)
+    v: jnp.ndarray,  # (B, Skv, KV, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Skv, 8))
+    sq_pad = -(-Sq // bq) * bq
+    skv_pad = -(-Skv // bk) * bk
+    d_pad = -(-D // 128) * 128 if D > 8 else D
+
+    qh = jnp.moveaxis(q, 2, 1)  # (B, H, Sq, D)
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+    qh = jnp.pad(qh, ((0, 0), (0, 0), (0, sq_pad - Sq), (0, d_pad - D)))
+    kh = jnp.pad(kh, ((0, 0), (0, 0), (0, skv_pad - Skv), (0, d_pad - D)))
+    vh = jnp.pad(vh, ((0, 0), (0, 0), (0, skv_pad - Skv), (0, d_pad - D)))
+    # padded KV rows must never win the softmax: push them outside the
+    # causal horizon by masking via an effective window?  Simpler: padded
+    # keys have k = 0 -> score 0, which CAN beat real scores.  Mask them
+    # by position: padded kv positions are >= Skv; for causal attention
+    # q_pos < Skv + q_offset keeps them masked only if q_pos < kv_pos —
+    # true whenever Sq <= Skv (our use).  For non-causal (encoder), rely
+    # on explicit masking below via window trick — instead we handle it
+    # by setting padded K rows to a large negative projection surrogate:
+    if skv_pad != Skv and not causal:
+        # make padded keys unreachable: give them +inf-free mask by zero v
+        # and -inf-like scores via k filled with 0 and an additive bias is
+        # not expressible post-hoc; instead fall back to causal=False safe
+        # path: set padded k rows far along D so dot stays 0, then subtract
+        # via q_offset-independent positional mask inside the kernel using
+        # window: not applicable -> use exact-length call instead.
+        raise ValueError(
+            "non-causal pallas path requires Skv to be a multiple of block_k"
+        )
+
+    out = flash_attention_pallas(
+        qh, kh, vh,
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=bq, block_k=bk, interpret=interpret,
+        scale=D ** -0.5,  # true head dim, not the lane-padded one
+    )
+    out = out[:, :, :Sq, :D]
+    return jnp.moveaxis(out, 1, 2)  # (B, Sq, H, D)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Re-exports the model's unchunked O(S^2) reference — the kernel must match
+this math exactly (same masking semantics: causal + sliding window + GQA).
+"""
+from __future__ import annotations
+
+from repro.models.attention import attention_reference  # noqa: F401

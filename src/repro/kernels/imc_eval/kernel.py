@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: IMC design-space population evaluation.
+
+The paper's hot loop — evaluate a population of chip designs against a
+workload's layer table — as a VMEM-tiled (designs x layers) grid:
+
+  * designs live on the LANE axis (tile 128, the VPU vector width),
+  * layers live on the SUBLANE axis (tile 8),
+  * grid = (P // 128, L // 8); the layer axis is the innermost
+    ("arbitrary") grid dim so each design-tile's partial sums accumulate
+    in-place in the output block across layer steps,
+  * all tech constants are compile-time Python floats (baked into the
+    kernel body; nothing but the design/layer tiles touches VMEM).
+
+Layout choices (HW-codesign): every per-(design, layer) term is an
+(8, 128) outer-product-style vector op — sublane-broadcast of the layer
+feature column against the lane vector of design parameters.  This is the
+TPU-native shape of the paper's evaluator: no MXU needed (no matmuls),
+pure 8x128 VPU tiles, one pass over HBM for the layer table.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.imc.tech import TECH, TechParams
+
+LANE = 128  # designs per tile (lane axis)
+SUB = 8  # layers per tile (sublane axis)
+
+
+def _eval_kernel(
+    feats_ref,  # (6, SUB)   layer features tile (feature-major)
+    mask_ref,  # (1, SUB)
+    d_ref,  # (9, LANE)  design params tile (param-major)
+    energy_ref,  # (1, LANE)  accumulated outputs
+    latency_ref,  # (1, LANE)
+    demand_ref,  # (1, LANE)
+    *,
+    tech: TechParams,
+):
+    li = pl.program_id(1)  # layer-tile index (innermost, sequential)
+
+    d = d_ref[...]  # (9, LANE)
+    rows, cols = d[0:1], d[1:2]  # (1, LANE)
+    g_chip, v_op, bits = d[4:5], d[5:6], d[6:7]
+    t_cyc, glb_mb = d[7:8], d[8:9]
+
+    f = feats_ref[...]  # (6, SUB)
+    mk = mask_ref[...].astype(jnp.float32)  # (1, SUB)
+
+    # (SUB, 1) feature columns x (1, LANE) design rows -> (SUB, LANE) tiles
+    def col(i):
+        return f[i : i + 1, :].T  # (SUB, 1)
+
+    M, K, N, Ain, Aout, G = (col(i) for i in range(6))
+    mkc = mk.T  # (SUB, 1)
+
+    phases = jnp.float32(tech.input_bits)
+    cpw = jnp.ceil(jnp.float32(tech.weight_bits) / bits)  # (1, LANE)
+    ncol = jnp.ceil(N * cpw / cols)  # (SUB, LANE)
+    nrow = jnp.ceil(K / rows)
+    xb = nrow * ncol * G
+    demand = (xb * mkc).sum(axis=0, keepdims=True)  # (1, LANE)
+
+    bytes_l = Ain + Aout
+    l_comp = M * (phases * tech.adc_share) * t_cyc
+    l_comm = bytes_l / (g_chip * tech.router_flit_bytes) * t_cyc
+    spill = jnp.maximum(bytes_l - glb_mb * float(1 << 20), 0.0)
+    l_dram = spill * (1.0 / tech.dram_bw_bytes_per_ns)
+    latency = ((l_comp + l_comm + l_dram) * mkc).sum(axis=0, keepdims=True)
+
+    e_cell = v_op * v_op * (tech.g_avg_s * 1e3) * t_cyc  # (1, LANE)
+    e_analog = M * phases * (K * (N * cpw) * G) * e_cell
+    e_adc = M * phases * (N * cpw) * G * tech.adc_energy_pj
+    e_dac = M * phases * K * ncol * G * tech.dac_energy_pj
+    e_route = bytes_l * tech.router_energy_pj_per_byte
+    e_buf = bytes_l * (
+        tech.tile_buf_energy_pj_per_byte + tech.glb_energy_pj_per_byte
+    )
+    e_dram = spill * tech.dram_energy_pj_per_byte
+    energy = (
+        (e_analog + e_adc + e_dac + e_route + e_buf + e_dram) * mkc
+    ).sum(axis=0, keepdims=True)
+
+    @pl.when(li == 0)
+    def _init():
+        energy_ref[...] = energy
+        latency_ref[...] = latency
+        demand_ref[...] = demand
+
+    @pl.when(li > 0)
+    def _acc():
+        energy_ref[...] += energy
+        latency_ref[...] += latency
+        demand_ref[...] += demand
+
+
+def imc_eval_pallas(
+    designs: jnp.ndarray,  # (P, 9)
+    feats: jnp.ndarray,  # (L, 6)
+    mask: jnp.ndarray,  # (L,)
+    *,
+    tech: TechParams = TECH,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pad, tile and launch.  Returns (energy, latency, demand), each (P,)."""
+    P, L = designs.shape[0], feats.shape[0]
+    Pp = -(-P // LANE) * LANE
+    Lp = -(-L // SUB) * SUB
+
+    dT = jnp.zeros((9, Pp), jnp.float32)
+    dT = dT.at[:, :P].set(designs.T.astype(jnp.float32))
+    # padded designs keep zeros -> guard divisions: set rows/cols/bits/g to 1
+    if Pp != P:
+        ones = jnp.ones((9, Pp - P), jnp.float32)
+        dT = dT.at[:, P:].set(ones)
+    fT = jnp.zeros((6, Lp), jnp.float32).at[:, :L].set(feats.T.astype(jnp.float32))
+    mk = jnp.zeros((1, Lp), jnp.float32).at[0, :L].set(mask.astype(jnp.float32))
+
+    grid = (Pp // LANE, Lp // SUB)
+    out_shape = [jax.ShapeDtypeStruct((1, Pp), jnp.float32)] * 3
+    out_spec = pl.BlockSpec((1, LANE), lambda p, l: (0, p))
+    energy, latency, demand = pl.pallas_call(
+        functools.partial(_eval_kernel, tech=tech),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((6, SUB), lambda p, l: (0, l)),
+            pl.BlockSpec((1, SUB), lambda p, l: (0, l)),
+            pl.BlockSpec((9, LANE), lambda p, l: (0, p)),
+        ],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(fT, mk, dT)
+    return energy[0, :P], latency[0, :P], demand[0, :P]

@@ -1,0 +1,67 @@
+"""Jitted wrapper: full EvalResult via the Pallas imc_eval kernel.
+
+Drop-in for ``repro.imc.cost.evaluate_designs`` — the per-(design, layer)
+sums run in the kernel (one launch per workload; W is small), the design-
+global terms (area, leakage, V/f validity, fits) are tiny jnp epilogues.
+
+``backend="jnp"`` selects the pure-jnp oracle path (identical math); tests
+assert allclose between the two across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.imc.cost import DesignArrays, EvalResult, area_mm2
+from repro.imc.tech import TECH, TechParams
+from repro.kernels.imc_eval import ref as ref_mod
+from repro.kernels.imc_eval.kernel import imc_eval_pallas
+from repro.workloads.pack import WorkloadSet
+
+
+def evaluate_designs_kernel(
+    d: DesignArrays,
+    ws: WorkloadSet,
+    tech: TechParams = TECH,
+    *,
+    backend: Literal["pallas", "jnp"] = "pallas",
+    interpret: bool = True,
+) -> EvalResult:
+    designs = jnp.stack(list(d), axis=1).astype(jnp.float32)  # (P, 9)
+    P, W = designs.shape[0], ws.n
+
+    energies, latencies, demands = [], [], []
+    for w in range(W):
+        feats, mask = ws.feats[w], ws.mask[w]
+        if backend == "pallas":
+            e, l, x = imc_eval_pallas(designs, feats, mask, tech=tech, interpret=interpret)
+        else:
+            e, l, x = ref_mod.eval_one_workload(designs, feats, mask, tech)
+        energies.append(e)
+        latencies.append(l)
+        demands.append(x)
+    energy = jnp.stack(energies, axis=1)  # (P, W)
+    latency = jnp.stack(latencies, axis=1)
+    demand = jnp.stack(demands, axis=1)
+
+    area = area_mm2(d, tech)  # (P,)
+    energy = energy + tech.leak_mw_per_mm2 * area[:, None] * latency
+
+    capacity = (d.g_per_chip * d.t_per_router * d.c_per_tile).astype(jnp.float32)
+    fits = demand <= capacity[:, None]
+    util = demand / capacity[:, None]
+
+    k = (tech.v_nominal - tech.v_th) ** tech.alpha_power / tech.v_nominal
+    t_min = k * d.v_op / (d.v_op - tech.v_th) ** tech.alpha_power
+    valid = d.t_cycle_ns >= t_min
+
+    return EvalResult(
+        energy_pj=energy,
+        latency_ns=latency,
+        area_mm2=area,
+        fits=fits,
+        valid=valid,
+        util=util,
+    )

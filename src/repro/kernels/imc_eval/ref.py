@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the IMC population-evaluation kernel.
+
+Per-(design, layer) closed-form cost terms for ONE workload, identical in
+math to ``repro.imc.cost.evaluate_designs`` (asserted by tests), but
+expressed as the (designs x layers) outer grid the Pallas kernel tiles:
+
+    energy (P,), latency (P,), demand (P,)  =  sum over (masked) layers.
+
+The leakage term (area x latency) and the fits/valid verdicts are design-
+global and stay outside the kernel (see ``ops.py``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.imc.tech import TECH, TechParams
+
+
+def eval_one_workload(
+    designs: jnp.ndarray,  # (P, 9) decoded design values (space.FIELDS order)
+    feats: jnp.ndarray,  # (L, 6) layer features (M, K, N, A_in, A_out, G)
+    mask: jnp.ndarray,  # (L,) validity
+    tech: TechParams = TECH,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (energy_pj (P,), latency_ns (P,), xbar_demand (P,))."""
+    rows, cols, _cpt, _tpr, g_chip, v_op, bits, t_cyc, glb_mb = [
+        designs[:, i][:, None] for i in range(9)
+    ]  # (P, 1) each
+    M, K, N, Ain, Aout, G = [feats[None, :, i] for i in range(6)]  # (1, L)
+    mk = mask[None, :].astype(jnp.float32)
+
+    phases = jnp.float32(tech.input_bits)
+    cpw = jnp.ceil(jnp.float32(tech.weight_bits) / bits)
+    ncol = jnp.ceil(N * cpw / cols)
+    nrow = jnp.ceil(K / rows)
+    xb = nrow * ncol * G  # (P, L)
+    demand = (xb * mk).sum(-1)
+
+    bytes_l = Ain + Aout
+    l_comp = M * phases * tech.adc_share * t_cyc
+    l_comm = bytes_l / (g_chip * tech.router_flit_bytes) * t_cyc
+    spill = jnp.maximum(bytes_l - glb_mb * (1 << 20), 0.0)
+    l_dram = spill / tech.dram_bw_bytes_per_ns
+    latency = ((l_comp + l_comm + l_dram) * mk).sum(-1)
+
+    e_cell = v_op**2 * tech.g_avg_s * t_cyc * 1e3
+    cells = K * (N * cpw) * G
+    e_analog = M * phases * cells * e_cell
+    e_adc = M * phases * (N * cpw) * G * tech.adc_energy_pj
+    e_dac = M * phases * K * ncol * G * tech.dac_energy_pj
+    e_route = bytes_l * tech.router_energy_pj_per_byte
+    e_buf = bytes_l * (tech.tile_buf_energy_pj_per_byte + tech.glb_energy_pj_per_byte)
+    e_dram = spill * tech.dram_energy_pj_per_byte
+    energy = ((e_analog + e_adc + e_dac + e_route + e_buf + e_dram) * mk).sum(-1)
+
+    return energy, latency, demand

@@ -1,0 +1,145 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (state-space dual) scan.
+
+Recurrence (per batch b, head h; scalar decay per head):
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t^T      h: (N, P)
+    y_t = C_t^T h_t                                          y: (P,)
+
+Two references:
+  * ``ssd_sequential`` — direct ``lax.scan`` over time (slow, exact oracle).
+  * ``ssd_chunked``    — the SSD chunked algorithm [arXiv:2405.21060 §6]:
+      intra-chunk quadratic term + inter-chunk state pass.  This is the math
+      the Pallas kernel implements; it is also the portable model fast path.
+
+Shapes: x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,G,N) with H % G == 0.
+Returns (y (B,S,H,P), final_state (B,H,N,P)).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.unroll import maybe_scan
+
+
+def _expand_groups(Bm: jax.Array, H: int) -> jax.Array:
+    """(B,S,G,N) -> (B,S,H,N) by repeating each group over its heads."""
+    Bsz, S, G, N = Bm.shape
+    rep = H // G
+    return jnp.repeat(Bm, rep, axis=2)
+
+
+def ssd_sequential(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Bh = _expand_groups(Bm.astype(jnp.float32), H)
+    Ch = _expand_groups(Cm.astype(jnp.float32), H)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h = jnp.zeros((B, H, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        xt, dtt, Bt, Ct = xf[:, t], dtf[:, t], Bh[:, t], Ch[:, t]
+        decay = jnp.exp(dtt * Af)[..., None, None]  # (B,H,1,1)
+        h = h * decay + jnp.einsum("bhn,bhp->bhnp", Bt * dtt[..., None], xt)
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    y = ys.swapaxes(0, 1)  # (B,S,H,P)
+    return y.astype(x.dtype), h
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    h0: Optional[jax.Array] = None,
+    *,
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    Q = chunk
+
+    xf = x.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, Q, H)
+    Af = A.astype(jnp.float32)
+    Bh = _expand_groups(Bm.astype(jnp.float32), H).reshape(B, nc, Q, H, N)
+    Ch = _expand_groups(Cm.astype(jnp.float32), H).reshape(B, nc, Q, H, N)
+
+    a = dtf * Af  # (B,nc,Q,H) log-decay per step (<= 0)
+    cum = jnp.cumsum(a, axis=2)  # alpha_i within chunk (inclusive)
+    total = cum[:, :, -1]  # (B,nc,H)
+
+    # --- intra-chunk (quadratic within chunk) --------------------------------
+    # M[i,j] = exp(alpha_i - alpha_j) for j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q_i,Q_j,H)
+    li = jnp.arange(Q)
+    causal = (li[:, None] >= li[None, :])[None, None, ..., None]
+    # mask BEFORE the exp: for j > i, diff > 0 can overflow exp and the
+    # where-cotangent turns inf * 0 into NaN.  exp(-inf) = 0 with zero grad.
+    M = jnp.exp(jnp.where(causal, diff, -jnp.inf))
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)  # C_i . B_j
+    xdt = xf * dtf[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M * scores, xdt)
+
+    # --- chunk summaries → inter-chunk recurrence ----------------------------
+    # state contribution of chunk c: sum_j exp(total - alpha_j) dt_j B_j x_j^T
+    w = jnp.exp(total[:, :, None] - cum)  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcjhn,bcjhp->bchnp", Bh * (w * dtf)[..., None], xf)
+
+    h_init = jnp.zeros((B, H, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def carry(h, c):
+        h_out = h  # state entering chunk c
+        h = h * jnp.exp(total[:, c])[..., None, None] + S_c[:, c]
+        return h, h_out
+
+    h_final, h_in = maybe_scan(carry, h_init, jnp.arange(nc))
+    h_in = h_in.swapaxes(0, 1)  # (B,nc,H,N,P) state entering each chunk
+
+    # y_inter[i] = exp(alpha_i) * C_i . h_in
+    y_inter = jnp.einsum(
+        "bcihn,bchnp->bcihp", Ch * jnp.exp(cum)[..., None], h_in
+    )
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    h: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One token: x (B,H,P); dt (B,H); Bm/Cm (B,G,N); h (B,H,N,P)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32))[..., None, None]
+    h = h.astype(jnp.float32) * decay + jnp.einsum(
+        "bhn,bhp->bhnp", Bh * dtf[..., None], x.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+    return y.astype(x.dtype), h

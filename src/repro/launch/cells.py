@@ -1,0 +1,224 @@
+"""(architecture x input-shape) cells: abstract inputs + step builders.
+
+A *cell* is one assigned (arch, shape) pair.  For each cell this module
+provides
+
+* ``input_specs``      — ``ShapeDtypeStruct`` stand-ins for every input
+                          (weak-type correct, shardable, zero allocation),
+* ``input_pspecs``     — matching ``PartitionSpec``s for a mesh,
+* ``abstract_state``   — param (and opt/cache) structs,
+* ``build_step``       — the jittable step function + donate/static info,
+
+used identically by the dry-run launcher, the roofline pass and the tests
+(tests call the same builders on reduced configs with real arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ALL_SHAPES, ModelConfig, ShapeSpec, get_config, list_configs
+from repro.distributed.sharding import cache_spec, input_sharding, params_sharding
+from repro.models import transformer
+from repro.models.common import param_structs
+from repro.optim import AdamWState
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.train.step import make_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeSpec
+
+    @property
+    def name(self) -> str:
+        return f"{self.cfg.name}/{self.shape.name}"
+
+
+def all_cells(arch: Optional[str] = None, shape: Optional[str] = None) -> List[Cell]:
+    """Every runnable (arch x shape) cell, honouring documented skips."""
+    cells = []
+    for a in list_configs() if arch is None else [arch]:
+        cfg = get_config(a)
+        for s in cfg.supported_shapes():
+            if shape is not None and s.name != shape:
+                continue
+            cells.append(Cell(cfg, s))
+    return cells
+
+
+def skipped_cells() -> List[Tuple[str, str, str]]:
+    out = []
+    for a in list_configs():
+        cfg = get_config(a)
+        for s, why in cfg.shape_skips():
+            out.append((a, s, why))
+    return out
+
+
+# ---------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for one cell (the ``batch`` argument of the step)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        out["inputs"] = sds((B, S), i32)
+        out["targets"] = sds((B, S), i32)
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((B, S), i32)
+    else:  # decode: one new token against a cache of S
+        out["token"] = sds((B, 1), i32)
+        out["pos"] = sds((B,), i32)  # per-slot positions (continuous batching)
+    if cfg.vision_tokens and shape.kind != "decode":
+        out["vision_embeds"] = sds((B, cfg.vision_tokens, cfg.d_model), bf16)
+        out["mrope_pos"] = sds((3, B, S), i32)
+    if cfg.is_encdec and shape.kind != "decode":
+        out["frames"] = sds((B, S, cfg.d_model), bf16)
+    return out
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Dict[str, P]:
+    return input_sharding(cfg, shape, mesh)
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeSpec, key: jax.Array) -> Dict[str, jax.Array]:
+    """Real (random) arrays matching ``input_specs`` — smoke tests."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if s.dtype == jnp.int32 and name != "pos":
+            out[name] = jax.random.randint(k, s.shape, 0, min(cfg.vocab_size, 1000), jnp.int32)
+        elif name == "pos":
+            out[name] = jnp.full(s.shape, shape.seq_len - 1, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype) * 0.02
+    if "mrope_pos" in out:
+        B, S = shape.global_batch, shape.seq_len
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (3, B, S))
+        out["mrope_pos"] = pos
+    return out
+
+
+# ------------------------------------------------------------- abstract state
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    return param_structs(transformer.param_template(cfg), dtype)
+
+
+def abstract_opt_state(cfg: ModelConfig) -> AdamWState:
+    p = abstract_params(cfg, jnp.float32)
+    zeros = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=zeros,
+        nu=jax.tree.map(lambda s: s, zeros),
+    )
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> PyTree:
+    return transformer.cache_template(cfg, shape.global_batch, shape.seq_len, dtype)
+
+
+# ------------------------------------------------------------------ the steps
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to jit/lower one cell."""
+
+    fn: Callable  # the step function
+    args: Tuple  # abstract arguments (ShapeDtypeStructs)
+    in_shardings: Tuple  # matching PartitionSpec trees
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+
+
+ACCUM_BY_ARCH = {
+    # chosen per the memory dry-runs (EXPERIMENTS.md §Dry-run): activation
+    # memory scales ~1/accum; the big/MoE archs need deeper microbatching
+    "qwen2-72b": 4,
+    "jamba-v0.1-52b": 8,
+    "qwen3-moe-235b-a22b": 8,
+    "gemma-7b": 4,
+    "whisper-medium": 4,
+    "yi-9b": 4,
+}
+
+
+def default_accum(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Microbatching policy: divide train-step activation memory to fit the
+    16 GiB HBM budget at 4k x 256; inference steps never accumulate."""
+    if shape.kind != "train":
+        return 1
+    return ACCUM_BY_ARCH.get(cfg.name, 2)
+
+
+def build_step(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh: Mesh,
+    *,
+    remat: bool = True,
+    accum: Optional[int] = None,
+    sharding_overrides: Optional[Dict[str, Any]] = None,
+    seq_axis: Any = "model",
+) -> StepBundle:
+    """Build the (abstract) step for a cell on a mesh.
+
+    train   -> step(params, opt_state, batch)
+    prefill -> step(params, batch) -> (logits, cache)
+    decode  -> step(params, cache, batch) -> (logits, cache)
+    """
+    if accum is None:
+        accum = default_accum(cfg, shape)
+    tmpl = transformer.param_template(cfg)
+    pspec = jax.tree.map(
+        lambda s: s.spec, params_sharding(cfg, mesh, tmpl, sharding_overrides)
+    )
+    params = abstract_params(cfg)
+    bspecs = input_pspecs(cfg, shape, mesh)
+    batch = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, remat=remat, accum=accum)
+        opt = abstract_opt_state(cfg)
+        opt_spec = AdamWState(step=P(), mu=pspec, nu=jax.tree.map(lambda s: s, pspec))
+        return StepBundle(
+            fn=step,
+            args=(params, opt, batch),
+            in_shardings=(pspec, opt_spec, bspecs),
+            out_shardings=(pspec, opt_spec, None),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        cspec = cache_spec(cfg, shape, mesh, seq_axis=seq_axis)
+        return StepBundle(
+            fn=step,
+            args=(params, batch),
+            in_shardings=(pspec, bspecs),
+            out_shardings=(None, cspec),
+            donate_argnums=(),
+        )
+
+    # decode
+    step = make_decode_step(cfg)
+    cache = abstract_cache(cfg, shape)
+    cspec = cache_spec(cfg, shape, mesh, seq_axis=seq_axis)
+    return StepBundle(
+        fn=step,
+        args=(params, cache, batch),
+        in_shardings=(pspec, cspec, bspecs),
+        out_shardings=(None, cspec),
+        donate_argnums=(1,),
+    )

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run launcher must set
+``xla_force_host_platform_device_count`` before any jax initialization).
+
+Mesh axes:
+  * ``pod``   — slow DCN-class axis between pods (multi-pod only).  Only the
+                gradient all-reduce (optionally compressed) crosses it.
+  * ``data``  — intra-pod FSDP/ZeRO + batch parallelism.
+  * ``model`` — Megatron-style tensor/expert/sequence parallelism.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh over however many devices exist (tests, elasticity)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over the devices actually present (CPU tests: 1 device)."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+def describe(mesh: Mesh) -> str:
+    return "x".join(
+        f"{a}={s}" for a, s in zip(mesh.axis_names, mesh.devices.shape)
+    )

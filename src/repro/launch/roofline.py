@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+DOC = """Roofline report + perf-iteration driver.
+
+    python -m repro.launch.roofline --report          # table from dry-run records
+    python -m repro.launch.roofline --hillclimb CELL  # re-lower a cell with a
+                                                      # named variant set
+
+Reads experiments/dryrun/<mesh>/<cell>.json (written by launch/dryrun.py)
+and emits the §Roofline markdown table; the hillclimb mode lowers a cell
+under named optimization variants and prints the before/after terms.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+RESULT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+SINGLE_POD = "data=16xmodel=16"
+
+HEADER = (
+    "| cell | t_compute (ms) | t_memory (ms) | t_collective (ms) | bottleneck "
+    "| mem/dev (GiB) | useful 6ND/HLO | roofline frac |\n"
+    "|---|---|---|---|---|---|---|---|"
+)
+
+
+def load_records(mesh: str = SINGLE_POD) -> List[Dict[str, Any]]:
+    out = []
+    d = RESULT_DIR / mesh
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        if p.name.startswith("paper-dse"):
+            continue
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def row(rec: Dict[str, Any]) -> str:
+    r = rec["roofline"]
+    return (
+        f"| {rec['cell']} | {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+        f"| {r['t_collective_s']*1e3:.2f} | {r['bottleneck']} "
+        f"| {rec['memory']['per_device_gb']:.2f} | {r['useful_ratio']:.2f} "
+        f"| {r['peak_fraction']:.1%} |"
+    )
+
+
+def report(mesh: str = SINGLE_POD) -> str:
+    recs = load_records(mesh)
+    lines = [HEADER] + [row(r) for r in recs]
+    return "\n".join(lines)
+
+
+# ------------------------------------------------------------------ hillclimb
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    # name -> build_step kwargs overrides
+    "baseline": {},
+    "accum4": {"accum": 4},
+    "accum8": {"accum": 8},
+    "no-seq-parallel": {"sharding_overrides": {"seq": None}},
+    "no-fsdp": {"sharding_overrides": {"embed": None}},
+    "fsdp-2d": {"sharding_overrides": {"embed": ("data",)}},
+    "seq-over-data": {"seq_axis": "data"},
+    "cache-seq-2d": {"seq_axis": ("data", "model")},
+    "no-remat": {"remat": False},
+}
+
+
+def hillclimb(cell_name: str, variants: List[str], correct: bool = True):
+    from repro.configs.base import SHAPES_BY_NAME, get_config
+    from repro.launch.cells import Cell
+    from repro.launch.dryrun import dryrun_cell
+    from repro.launch.mesh import make_production_mesh
+
+    arch, shape = cell_name.split("/")
+    cell = Cell(get_config(arch), SHAPES_BY_NAME[shape])
+    mesh = make_production_mesh()
+    out = []
+    for v in variants:
+        kw = VARIANTS[v]
+        try:
+            rec = dryrun_cell(cell, mesh, save=False, build_kwargs=kw, correct=correct)
+            r = rec["roofline"]
+            print(
+                f"[{cell_name} :: {v}] comp={r['t_compute_s']*1e3:.2f}ms "
+                f"mem={r['t_memory_s']*1e3:.2f}ms coll={r['t_collective_s']*1e3:.2f}ms "
+                f"bottleneck={r['bottleneck']} mem/dev={rec['memory']['per_device_gb']:.2f}GiB",
+                flush=True,
+            )
+            out.append((v, rec))
+        except Exception as e:  # noqa: BLE001
+            print(f"[{cell_name} :: {v}] FAIL {e!r}", flush=True)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--mesh", default=SINGLE_POD)
+    ap.add_argument("--hillclimb", default=None, help="arch/shape cell name")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--no-correction", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.report:
+        print(report(args.mesh))
+        return 0
+    if args.hillclimb:
+        hillclimb(
+            args.hillclimb, args.variants.split(","),
+            correct=not args.no_correction,
+        )
+        return 0
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

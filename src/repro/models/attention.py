@@ -1,0 +1,170 @@
+"""Attention: chunked online-softmax (flash-style) in pure jnp.
+
+This is the *portable* implementation used for training / prefill lowering on
+every backend (the O(S^2) score matrix never materializes — memory is bounded
+by one (Sq, chunk) block).  On real TPUs the Pallas kernel
+``repro.kernels.flash_attention`` is a drop-in replacement (same math,
+validated against this code in interpret mode).
+
+Shapes follow the (B, S, H, D) convention with grouped KV heads:
+q: (B, Sq, H, D);  k, v: (B, Skv, KV, D);  H % KV == 0.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.utils.unroll import MAX_UNROLL, maybe_scan, unrolling
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: int):
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), jnp.bool_)
+    if causal:
+        m &= q_pos[:, None] >= kv_pos[None, :]
+    if window > 0:
+        m &= q_pos[:, None] - kv_pos[None, :] < window
+    return m
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Chunked attention with online softmax over KV blocks.
+
+    ``q_offset`` shifts query positions (queries are at absolute positions
+    ``q_offset + [0..Sq)`` while keys are at ``[0..Skv)``) — used when a
+    query block attends into a longer KV (e.g. chunked prefill).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    chunk = min(chunk, Skv)
+    if unrolling() and Skv // chunk > MAX_UNROLL:
+        # cost-analysis lowering: widen chunks so the scan fully unrolls
+        # (n_chunks is a memory knob, not semantics; nothing executes here)
+        chunk = -(-Skv // MAX_UNROLL)
+    assert Skv % chunk == 0, (Skv, chunk)
+    n_chunks = Skv // chunk
+    scale = D ** -0.5
+
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    # GSPMD hint: keep batch sharded through the chunk scan (the carry inits
+    # below are fresh constants — without hints the loop can resolve to a
+    # batch-replicated schedule that blows memory by the data-axis size).
+    qf = constrain(qf, ("batch", None, None, None, None))
+    q_pos = q_offset + jnp.arange(Sq)
+
+    # scan carries running (max, sumexp, weighted-acc)
+    def body(carry, ck):
+        m_prev, l_prev, acc = carry
+        kc, vc, start = ck  # (B, C, KV, D), (B, C, KV, D), scalar
+        kv_pos = start + jnp.arange(chunk)
+        # scores: (B, KV, G, Sq, C)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kc.astype(jnp.float32))
+        msk = _mask(q_pos, kv_pos, causal, window)  # (Sq, C)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    kc = k.reshape(B, n_chunks, chunk, KV, D).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, KV, D).swapaxes(0, 1)
+    starts = jnp.arange(n_chunks) * chunk
+    bkgs = (None, "batch", None, None, None)
+    kc = constrain(kc, bkgs)
+    vc = constrain(vc, bkgs)
+    init = (
+        constrain(jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32), ("batch", None, None, None)),
+        constrain(jnp.zeros((B, KV, G, Sq), jnp.float32), ("batch", None, None, None)),
+        constrain(jnp.zeros((B, KV, G, Sq, D), jnp.float32), ("batch", None, None, None, None)),
+    )
+    (m, l, acc), _ = maybe_scan(body, init, (kc, vc, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, Sq, D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Unchunked O(S^2) oracle (tests only)."""
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qf = (q * D ** -0.5).astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qf, k.astype(jnp.float32))
+    msk = _mask(q_offset + jnp.arange(Sq), jnp.arange(Skv), causal, window)
+    s = jnp.where(msk[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bkgqd", p, v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    window: int = 0,
+    valid_len=None,
+) -> jax.Array:
+    """Single-token decode: q (B, 1, H, D) against a full cache (B, S, KV, D).
+
+    The softmax reduction runs over the (possibly sequence-sharded) cache —
+    under GSPMD this lowers to flash-decode-style partial softmax + combine
+    collectives on the sharded axis.
+
+    ``valid_len`` (scalar or (B,)) masks cache rows ``>= valid_len``
+    (unwritten ring slots during early decode, per sequence); ``window``
+    masks a linear-layout cache to the trailing window (tests / non-ring
+    callers).
+    """
+    B, Sq, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    # keep the CACHE operands in their storage dtype and accumulate in f32
+    # on the MXU (preferred_element_type).  An explicit .astype(f32) on the
+    # cache gets HOISTED out of the decode block-scan by XLA — materializing
+    # a full f32 copy of the stacked KV cache (2x cache memory).
+    qf = (q * D ** -0.5).astype(k_cache.dtype).reshape(B, Sq, KV, G, D)
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qf, k_cache, preferred_element_type=jnp.float32
+    )
+    pos = jnp.arange(S)
+    if window > 0:
+        ok = pos >= (S - window)  # query sits at position S-1
+        s = jnp.where(ok[None, None, None, None], s, NEG_INF)
+    if valid_len is not None:
+        vl = jnp.broadcast_to(jnp.asarray(valid_len), (B,))
+        ok = pos[None, :] < vl[:, None]  # (B, S)
+        s = jnp.where(ok[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)

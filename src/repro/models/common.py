@@ -1,0 +1,192 @@
+"""Shared model building blocks + declarative parameter system.
+
+Parameters are declared as a nested dict of :class:`ParamDecl` (shape, logical
+dim names, init scale).  The same template materializes three ways:
+
+* ``init_params``    — real arrays (seeded, for training / smoke tests)
+* ``param_structs``  — ``ShapeDtypeStruct`` tree (dry-run: no allocation)
+* ``param_specs``    — ``PartitionSpec`` tree via logical→mesh rules
+
+so the model code, the launcher and the sharding rules can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]  # logical name per dim (None = replicated)
+    scale: float = 1.0  # stddev multiplier on fan-in init; 0 -> zeros; -1 -> ones
+    # alternative whole-tuple layout used when any *primary* named dim fails
+    # mesh divisibility (e.g. EP layout -> expert-TP layout for MoE weights
+    # whose expert count does not divide the model axis)
+    alt_logical: Optional[Tuple[Optional[str], ...]] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+        if self.alt_logical is not None:
+            assert len(self.shape) == len(self.alt_logical)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def tree_map_decl(f: Callable[[ParamDecl], Any], tree: PyTree) -> PyTree:
+    return jax.tree.map(f, tree, is_leaf=is_decl)
+
+
+def init_params(template: PyTree, key: jax.Array, dtype=jnp.float32) -> PyTree:
+    leaves, treedef = jax.tree.flatten(template, is_leaf=is_decl)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.scale == 0.0:
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.scale == -1.0:
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / (fan_in ** 0.5)
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_structs(template: PyTree, dtype=jnp.float32) -> PyTree:
+    return tree_map_decl(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), template)
+
+
+def param_specs(template: PyTree, rules: Dict[str, Any]) -> PyTree:
+    """Map logical dim names to mesh axes.  A rule value may be None, a str
+    axis, or a tuple of axes.  Dims whose size does not divide the mesh-axis
+    product fall back to replicated (safe for odd head counts, small experts).
+    """
+    mesh_sizes = rules.get("_mesh_sizes", {})
+
+    def axis_size(ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            n = 1
+            for a in ax:
+                n *= mesh_sizes.get(a, 1)
+            return n
+        return mesh_sizes.get(ax, 1)
+
+    def flat_axes(ax):
+        return tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+
+    def spec_for(shape, logical):
+        spec = []
+        used: set = set()
+        all_ok = True
+        for size, name in zip(shape, logical):
+            ax = rules.get(name) if name else None
+            if ax is None:
+                spec.append(None)
+                continue
+            n = axis_size(ax)
+            if n <= 1 or size % n != 0 or any(a in used for a in flat_axes(ax)):
+                spec.append(None)
+                all_ok = False
+                continue
+            used.update(flat_axes(ax))
+            spec.append(ax)
+        return P(*spec), all_ok
+
+    def one(d: ParamDecl):
+        spec, ok = spec_for(d.shape, d.logical)
+        if not ok and d.alt_logical is not None:
+            spec, _ = spec_for(d.shape, d.alt_logical)
+        return spec
+
+    return tree_map_decl(one, template)
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    """(t, h, w) half-dim sections; qwen2-vl uses (16, 24, 24) for D=128."""
+    half = head_dim // 2
+    t = half // 4
+    rem = half - t
+    return (t, rem // 2, rem - rem // 2)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): positions (3, ..., S) for (t, h, w) axes,
+    each rotating its own section of the head dim."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = rope_freqs(d, theta)  # (half,)
+    secs = mrope_sections(d)
+    # section id per frequency index
+    sec_id = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(secs)]
+    )  # (half,)
+    # select, per frequency, the (t|h|w) position stream: (half, ..., S)
+    pos = jnp.moveaxis(positions.astype(jnp.float32)[sec_id], 0, -1)  # (..., S, half)
+    ang = pos[..., None, :] * freqs  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (seq, d_model)."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freq[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------------------------------------------------ MLP acts
+def glu_act(name: str, gate: jax.Array, up: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(gate) * up
+    if name == "gelu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    raise ValueError(name)

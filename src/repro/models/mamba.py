@@ -1,0 +1,124 @@
+"""Mamba-2 (SSD) mixer block: in_proj -> causal depthwise conv -> SSD -> gate.
+
+Portable path uses the chunked jnp SSD from ``kernels/ssd_scan/ref.py``;
+on TPU the Pallas kernel (``kernels/ssd_scan/ops.py``) is the fast path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import ref as ssd
+from repro.distributed.ctx import constrain
+from repro.models.common import rms_norm
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # (B, K-1, conv_ch) trailing conv inputs
+    ssm: jax.Array  # (B, H, N, P) state
+
+
+def _dims(cfg):
+    d_inner = cfg.d_inner
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
+    conv_ch = d_inner + 2 * G * N
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    return d_inner, G, N, H, Pd, conv_ch, d_in_proj
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel K (shift-sum form, K unrolled)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(xBC)
+    S = xBC.shape[1]
+    for k in range(K):
+        shift = K - 1 - k
+        seg = jnp.pad(xBC, ((0, 0), (shift, 0), (0, 0)))[:, :S]
+        out = out + seg * w[k]
+    return out + b
+
+
+def mamba_mixer(
+    cfg,
+    p,
+    x: jax.Array,
+    cache: Optional[MambaCache] = None,
+    *,
+    return_cache: bool = False,
+) -> Tuple[jax.Array, Optional[MambaCache]]:
+    """x: (B, S, d_model).  Full-sequence form (train / prefill)."""
+    B, S, d = x.shape
+    d_inner, G, N, H, Pd, conv_ch, _ = _dims(cfg)
+
+    w_in = constrain(p["w_in"].astype(x.dtype), (None, "ssm_inner"))
+    zxbcdt = x @ w_in
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
+    xBC_raw = xBC
+
+    xBC = _causal_conv(xBC, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, Pd)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+
+    y, h = ssd.ssd_chunked(xs, dt, A, Bm, Cm, chunk=min(128, S))
+    y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    out = y @ constrain(p["w_out"].astype(y.dtype), ("ssm_inner", None))
+
+    new_cache = None
+    if return_cache:
+        K = cfg.ssm_conv
+        # trailing K-1 *pre-activation* conv inputs
+        conv_tail = xBC_raw[:, -(K - 1) :, :]
+        new_cache = MambaCache(conv=conv_tail, ssm=h)
+    return out, new_cache
+
+
+def mamba_decode(
+    cfg, p, x: jax.Array, cache: MambaCache
+) -> Tuple[jax.Array, MambaCache]:
+    """x: (B, 1, d_model); single-token step with carried conv + ssm state."""
+    B, _, d = x.shape
+    d_inner, G, N, H, Pd, conv_ch, _ = _dims(cfg)
+
+    w_in = constrain(p["w_in"].astype(x.dtype), (None, "ssm_inner"))
+    zxbcdt = x[:, 0] @ w_in  # (B, d_in_proj)
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
+
+    # conv over (cached K-1 inputs + current); compute in x dtype, keep the
+    # cache's own dtype stable (scan carry requires it)
+    w, b = p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype)
+    K = cfg.ssm_conv
+    window = jnp.concatenate(
+        [cache.conv.astype(x.dtype), xBC[:, None, :]], axis=1
+    )  # (B,K,ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + b
+    xBC_a = jax.nn.silu(conv_out)
+
+    xs, Bm, Cm = jnp.split(xBC_a, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, H, Pd)
+    Bm = Bm.reshape(B, G, N)
+    Cm = Cm.reshape(B, G, N)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, h = ssd.ssd_decode_step(xs, dtf, A, Bm, Cm, cache.ssm)
+    y = y + xs * p["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(B, d_inner)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    w_out = constrain(p["w_out"].astype(y.dtype), ("ssm_inner", None))
+    out = (y @ w_out)[:, None, :]
+
+    new_cache = MambaCache(conv=window[:, 1:].astype(cache.conv.dtype), ssm=h)
+    return out, new_cache

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch (GShard-style).
+
+Static shapes throughout (SPMD-safe): tokens are routed into a per-sequence
+``(B, E, C, d)`` buffer via scatter-add, experts run as one batched einsum
+over stacked weights ``(E, d, f)``, and results gather back.  Tokens beyond
+an expert's capacity ``C = ceil(S * topk * capacity_factor / E)`` are dropped
+(standard GShard semantics); the router aux loss keeps load balanced.
+
+Sharding: the expert dim of the stacked weights carries logical name
+"experts" — the rules map it to the `model` axis when divisible (true EP,
+GSPMD inserts the token all-to-all) and fall back to expert-TP (shard the
+"moe_ff" dim) otherwise (e.g. mixtral's 8 experts on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain, logical_axis_size
+from repro.models.common import glu_act
+
+
+def moe_capacity(seq: int, n_experts: int, topk: int, capacity_factor: float) -> int:
+    c = int(-(-seq * topk * capacity_factor // n_experts))  # ceil
+    return max(1, min(c, seq * topk))
+
+
+def moe_ffn(
+    x: jax.Array,
+    router: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    topk: int,
+    capacity_factor: float,
+    act: str = "silu",
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d); router: (d, E); w_*: (E, d, f) / (E, f, d).
+
+    Returns (output (B, S, d), aux load-balance loss (scalar)).
+    """
+    B, S, d = x.shape
+    E = router.shape[-1]
+    C = moe_capacity(S, E, topk, capacity_factor)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, S, E)
+    topw, topi = jax.lax.top_k(probs, topk)  # (B, S, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) entry within its expert queue, in seq order
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)  # (B, S, k, E)
+    flat = onehot.reshape(B, S * topk, E)
+    before = jnp.cumsum(flat, axis=1) - flat
+    pos = (before * flat).sum(-1)  # (B, S*k)
+    eid = topi.reshape(B, S * topk)
+    w = topw.reshape(B, S * topk)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C - 1)
+
+    # dispatch: scatter tokens into (B, E, C, d)
+    xk = jnp.repeat(x, topk, axis=1)  # (B, S*k, d) — entry (t, j) adjacent
+    xk = constrain(xk, ("batch", "seq", None))
+    contrib = xk * keep[..., None].astype(x.dtype)
+    contrib = constrain(contrib, ("batch", "seq", None))
+
+    # dispatch via vmap so the scatter keeps an explicit batch dim — GSPMD
+    # partitions batched scatters along it; flat advanced indexing would
+    # fold batch into the index space and force replication.
+    def _scatter_one(c_s, e_s, p_s):
+        return jnp.zeros((E, C, d), x.dtype).at[e_s, p_s].add(c_s)
+
+    buf = jax.vmap(_scatter_one)(contrib, eid, pos_c)
+    # EP hint: shard the dispatch buffer's expert dim over the model axis
+    # (when divisible) — the scatter above then lowers to the token
+    # all-to-all and the expert einsums stay local.  No-op off-mesh.
+    buf = constrain(buf, ("batch", "experts", None, None))
+
+    # expert FFN (batched over E): SwiGLU/GeGLU.  In the EP layout, cast
+    # the expert weights to the compute dtype and constrain the casted copy
+    # to the gathered layout (experts sharded, hidden replicated) — the
+    # all-gather then moves bf16, not the f32 masters.  In the expert-TP
+    # fallback (E does not divide the model axis) the weights stay in their
+    # storage layout: TP compute needs no gather at all.
+    ep_active = E % max(logical_axis_size("experts"), 1) == 0
+
+    def _compute_copy(w):
+        w = w.astype(buf.dtype)
+        return constrain(w, ("experts", None, None)) if ep_active else w
+
+    g = jnp.einsum("becd,edf->becf", buf, _compute_copy(w_gate))
+    u = jnp.einsum("becd,edf->becf", buf, _compute_copy(w_up))
+    h = glu_act(act, g, u)
+    y = jnp.einsum("becf,efd->becd", h, _compute_copy(w_down))
+    y = constrain(y, ("batch", "experts", None, None))
+
+    # combine: batched gather back + weight
+    yk = jax.vmap(lambda y_s, e_s, p_s: y_s[e_s, p_s])(y, eid, pos_c)
+    yk = constrain(yk, ("batch", "seq", None))
+    yk = yk * (w * keep).astype(y.dtype)[..., None]
+    out = constrain(yk.reshape(B, S, topk, d).sum(axis=2), ("batch", "seq", None))
+
+    # Switch-style load-balance aux: E * sum_e f_e * P_e
+    f_e = onehot.astype(jnp.float32).mean(axis=(0, 1, 2)) * topk  # fraction routed
+    p_e = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e)
+    return out, aux

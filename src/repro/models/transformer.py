@@ -1,0 +1,682 @@
+"""Unified LM assembly for every assigned architecture.
+
+One functional model covers dense / MoE / SSM / hybrid / enc-dec / VLM
+families.  Structure:
+
+* a ``ModelConfig.layer_plan()`` gives the repeating *period* of
+  (mixer, ffn) sub-layer kinds; parameters for each in-period *slot* are
+  stacked over ``n_blocks`` and the stack is traversed with ``lax.scan``
+  (small HLO -> fast 512-device dry-run compiles, natural remat unit).
+* three entry points:
+    - ``forward``      full-sequence (train / loss)
+    - ``prefill``      full-sequence returning a decode cache
+    - ``decode_step``  single token with carried cache
+* caches are plain pytrees so they shard/donate cleanly under pjit.
+
+Everything is pure-jnp (flash-style chunked attention, chunked SSD) so the
+same code lowers on CPU, GPU and TPU; Pallas TPU kernels in
+``repro.kernels`` are numerically-identical drop-ins (see kernels/README).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import constrain
+from repro.utils.unroll import maybe_scan
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models.common import (
+    ParamDecl,
+    apply_mrope,
+    apply_rope,
+    glu_act,
+    init_params,
+    layer_norm,
+    param_specs,
+    param_structs,
+    rms_norm,
+    sinusoid_positions,
+)
+
+PyTree = Any
+
+# ======================================================================
+# parameter templates
+# ======================================================================
+
+
+def _attn_decl(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    decl = {
+        "norm_w": ParamDecl((d,), ("embed",), -1.0),
+        "wq": ParamDecl((d, H * Dh), ("embed", "heads")),
+        "wk": ParamDecl((d, KV * Dh), ("embed", "kv_heads")),
+        "wv": ParamDecl((d, KV * Dh), ("embed", "kv_heads")),
+        "wo": ParamDecl((H * Dh, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        decl["bq"] = ParamDecl((H * Dh,), ("heads",), 0.0)
+        decl["bk"] = ParamDecl((KV * Dh,), ("kv_heads",), 0.0)
+        decl["bv"] = ParamDecl((KV * Dh,), ("kv_heads",), 0.0)
+    return decl
+
+
+def _xattn_decl(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+    """Cross-attention (whisper decoder); KV projected from encoder states."""
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "norm_w": ParamDecl((d,), ("embed",), -1.0),
+        "wq": ParamDecl((d, H * Dh), ("embed", "heads")),
+        "wk": ParamDecl((d, KV * Dh), ("embed", "kv_heads")),
+        "wv": ParamDecl((d, KV * Dh), ("embed", "kv_heads")),
+        "wo": ParamDecl((H * Dh, d), ("heads", "embed")),
+    }
+
+
+def _mlp_decl(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm_w": ParamDecl((d,), ("embed",), -1.0),
+        "w_gate": ParamDecl((d, f), ("embed", "ff")),
+        "w_up": ParamDecl((d, f), ("embed", "ff")),
+        "w_down": ParamDecl((f, d), ("ff", "embed")),
+    }
+
+
+def _moe_decl(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+    """Expert weights: EP-primary layout (experts over ``model``, expert
+    hidden over ``data``, d_model UNSHARDED — so the expert einsum's
+    contraction never fights the batch's data axis).  Falls back to the
+    expert-TP layout (hidden over ``model``, d_model over ``data``) when
+    the expert count does not divide the model axis (e.g. mixtral 8e/16)."""
+    d, f, E = cfg.d_model, cfg.moe_d_ff_, cfg.n_experts
+    ep_in = (("experts", None, "moe_ff_ep"), ("experts", "embed", "moe_ff"))
+    ep_out = (("experts", "moe_ff_ep", None), ("experts", "moe_ff", "embed"))
+    return {
+        "norm_w": ParamDecl((d,), ("embed",), -1.0),
+        "router": ParamDecl((d, E), ("embed", None)),
+        "w_gate": ParamDecl((E, d, f), ep_in[0], alt_logical=ep_in[1]),
+        "w_up": ParamDecl((E, d, f), ep_in[0], alt_logical=ep_in[1]),
+        "w_down": ParamDecl((E, f, d), ep_out[0], alt_logical=ep_out[1]),
+    }
+
+
+def _mamba_decl(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+    d = cfg.d_model
+    d_inner, G, N, H, Pd, conv_ch, d_in_proj = mamba_lib._dims(cfg)
+    return {
+        "norm_w_in": ParamDecl((d,), ("embed",), -1.0),
+        "w_in": ParamDecl((d, d_in_proj), ("embed", "ssm_inner")),
+        "conv_w": ParamDecl((cfg.ssm_conv, conv_ch), (None, "ssm_inner")),
+        "conv_b": ParamDecl((conv_ch,), ("ssm_inner",), 0.0),
+        "A_log": ParamDecl((H,), (None,), -1.0),  # init A = -1
+        "D": ParamDecl((H,), (None,), -1.0),
+        "dt_bias": ParamDecl((H,), (None,), 0.0),
+        "norm_w": ParamDecl((d_inner,), ("ssm_inner",), -1.0),
+        "w_out": ParamDecl((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+_SLOT_DECL = {"attn": _attn_decl, "mamba": _mamba_decl, "mlp": _mlp_decl, "moe": _moe_decl}
+
+
+def _block_decl(cfg: ModelConfig, *, decoder: bool) -> List[Dict[str, Any]]:
+    """Per-slot param decls for one period (mixer+ffn [+cross-attn])."""
+    slots = []
+    for mixer, ffn in cfg.layer_plan():
+        slot: Dict[str, Any] = {"mixer": _SLOT_DECL[mixer](cfg)}
+        if decoder and cfg.is_encdec:
+            slot["xattn"] = _xattn_decl(cfg)
+        if ffn != "none":
+            slot["ffn"] = _SLOT_DECL[ffn](cfg)
+        slots.append(slot)
+    return slots
+
+
+def _stack(tree: PyTree, n: int) -> PyTree:
+    """Add a leading stacked-layers dim to every ParamDecl."""
+    return jax.tree.map(
+        lambda d: ParamDecl(
+            (n,) + d.shape,
+            ("layers",) + d.logical,
+            d.scale,
+            alt_logical=(("layers",) + d.alt_logical) if d.alt_logical else None,
+        ),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamDecl),
+    )
+
+
+def param_template(cfg: ModelConfig) -> PyTree:
+    d, V = cfg.d_model, cfg.vocab_size
+    t: Dict[str, Any] = {
+        "embed": ParamDecl((V, d), ("vocab", "embed")),
+        "blocks": _stack(_block_decl(cfg, decoder=True), cfg.n_blocks),
+        "final_norm": ParamDecl((d,), ("embed",), -1.0),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamDecl((d, V), ("embed", "vocab"))
+    if cfg.is_encdec:
+        # stub frontend: precomputed frame embeddings -> linear proj
+        enc_cfg = cfg
+        t["encoder"] = {
+            "frames_proj": ParamDecl((d, d), ("embed", None)),
+            "blocks": _stack(
+                [{"mixer": _attn_decl(enc_cfg), "ffn": _mlp_decl(enc_cfg)}],
+                cfg.encoder_layers,
+            ),
+            "final_norm": ParamDecl((d,), ("embed",), -1.0),
+        }
+    return t
+
+
+# ======================================================================
+# sub-layer application
+# ======================================================================
+
+
+
+def _wc(p, name, dtype, logical):
+    """Weight compute-copy: cast to the compute dtype and constrain to the
+    GATHERED layout (FSDP dim replicated, TP dims kept).  The FSDP
+    all-gather then moves the bf16 copy instead of the f32 master —
+    halving gather traffic and the gathered live buffers.  No-op off-mesh.
+    """
+    return constrain(p[name].astype(dtype), logical)
+
+
+def _split_heads(x, n, d):
+    return x.reshape(x.shape[:-1] + (n, d))
+
+
+def _rope(cfg: ModelConfig, q, k, positions, mrope_pos):
+    if cfg.rope_type == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_type == "mrope":
+        q = apply_mrope(q, mrope_pos, cfg.rope_theta)
+        k = apply_mrope(k, mrope_pos, cfg.rope_theta)
+    return q, k
+
+
+def attn_full(cfg, p, x, *, positions, mrope_pos=None, causal=True, attn_impl="jnp"):
+    """Full-sequence self-attention sublayer. Returns (out, (k, v))."""
+    B, S, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    h = rms_norm(x, p["norm_w"], cfg.norm_eps)
+    q = h @ _wc(p, "wq", h.dtype, (None, "heads"))
+    k = h @ _wc(p, "wk", h.dtype, (None, "kv_heads"))
+    v = h @ _wc(p, "wv", h.dtype, (None, "kv_heads"))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = _split_heads(q, H, Dh)
+    k = _split_heads(k, KV, Dh)
+    v = _split_heads(v, KV, Dh)
+    q, k = _rope(cfg, q, k, positions, mrope_pos)
+    if attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        o = fa_ops.flash_attention(
+            q, k, v, causal=causal, window=cfg.sliding_window
+        )
+    else:
+        o = attn_lib.flash_attention(
+            q, k, v, causal=causal, window=cfg.sliding_window,
+            chunk=min(1024, S),
+        )
+    out = o.reshape(B, S, H * Dh) @ _wc(p, "wo", o.dtype, ("heads", None))
+    return x + out, (k, v)
+
+
+def xattn_full(cfg, p, x, enc_kv):
+    """Cross-attention with precomputed encoder (k, v)."""
+    B, S, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    k, v = enc_kv
+    h = rms_norm(x, p["norm_w"], cfg.norm_eps)
+    q = _split_heads(h @ _wc(p, "wq", h.dtype, (None, "heads")), H, Dh)
+    o = attn_lib.flash_attention(
+        q, k, v, causal=False, chunk=min(1024, k.shape[1])
+    )
+    return x + o.reshape(B, S, H * Dh) @ _wc(p, "wo", o.dtype, ("heads", None))
+
+
+def xattn_decode(cfg, p, x, enc_kv):
+    B, S1, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    k, v = enc_kv
+    h = rms_norm(x, p["norm_w"], cfg.norm_eps)
+    q = _split_heads(h @ _wc(p, "wq", h.dtype, (None, "heads")), H, Dh)
+    o = attn_lib.decode_attention(q, k, v)
+    return x + o.reshape(B, S1, H * Dh) @ _wc(p, "wo", o.dtype, ("heads", None))
+
+
+def _build_xkv(cfg, p, enc_out):
+    """Project encoder output to (k, v) for one decoder layer."""
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim_
+    k = _split_heads(enc_out @ _wc(p, "wk", enc_out.dtype, (None, "kv_heads")), KV, Dh)
+    v = _split_heads(enc_out @ _wc(p, "wv", enc_out.dtype, (None, "kv_heads")), KV, Dh)
+    return k, v
+
+
+def attn_decode(cfg, p, x, cache, *, pos, mrope_pos=None):
+    """Single-token self-attention against a ring/linear KV cache.
+
+    cache: {"k","v"}: (B, C, KV, Dh).  ``pos`` — absolute position of each
+    sequence's new token: scalar or (B,) vector (continuous batching: every
+    slot decodes at its own position).  With sliding-window the write index
+    wraps (ring buffer); unwritten rows are masked via per-row valid length.
+    """
+    B, S1, d = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    C = cache["k"].shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    h = rms_norm(x, p["norm_w"], cfg.norm_eps)
+    q = h @ _wc(p, "wq", h.dtype, (None, "heads"))
+    k = h @ _wc(p, "wk", h.dtype, (None, "kv_heads"))
+    v = h @ _wc(p, "wv", h.dtype, (None, "kv_heads"))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = _split_heads(q, H, Dh)
+    k = _split_heads(k, KV, Dh)
+    v = _split_heads(v, KV, Dh)
+    positions = pos[:, None]  # (B, 1)
+    if cfg.rope_type == "mrope":
+        mp = (
+            jnp.broadcast_to(pos, (3, B))[..., None]
+            if mrope_pos is None
+            else mrope_pos
+        )
+        q, k = _rope(cfg, q, k, None, mp)
+    else:
+        q, k = _rope(cfg, q, k, positions, None)
+    widx = jnp.mod(pos, C)  # (B,)
+
+    def upd(c, new):  # per-sequence ring write (batched scatter)
+        return jax.vmap(
+            lambda cb, nb, w: jax.lax.dynamic_update_slice(cb, nb, (w, 0, 0))
+        )(c, new.astype(c.dtype), widx)
+
+    k_cache = upd(cache["k"], k)
+    v_cache = upd(cache["v"], v)
+    valid = jnp.minimum(pos + 1, C)  # (B,) live cache rows per sequence
+    o = attn_lib.decode_attention(q, k_cache, v_cache, valid_len=valid)
+    out = o.reshape(B, S1, H * Dh) @ _wc(p, "wo", o.dtype, ("heads", None))
+    return x + out, {"k": k_cache, "v": v_cache}
+
+
+def mlp_sublayer(cfg, p, x):
+    h = rms_norm(x, p["norm_w"], cfg.norm_eps)
+    g = h @ _wc(p, "w_gate", h.dtype, (None, "ff"))
+    u = h @ _wc(p, "w_up", h.dtype, (None, "ff"))
+    return x + glu_act(cfg.mlp_act, g, u) @ _wc(p, "w_down", h.dtype, ("ff", None))
+
+
+def moe_sublayer(cfg, p, x):
+    h = rms_norm(x, p["norm_w"], cfg.norm_eps)
+    y, aux = moe_lib.moe_ffn(
+        h,
+        p["router"],
+        p["w_gate"],
+        p["w_up"],
+        p["w_down"],
+        topk=cfg.topk,
+        capacity_factor=cfg.capacity_factor,
+        act=cfg.mlp_act,
+    )
+    return x + y, aux
+
+
+def mamba_full(cfg, p, x, *, return_cache=False):
+    h = rms_norm(x, p["norm_w_in"], cfg.norm_eps)
+    y, cache = mamba_lib.mamba_mixer(cfg, p, h, return_cache=return_cache)
+    return x + y, cache
+
+
+def mamba_decode_sub(cfg, p, x, cache):
+    h = rms_norm(x, p["norm_w_in"], cfg.norm_eps)
+    y, cache = mamba_lib.mamba_decode(cfg, p, h, cache)
+    return x + y, cache
+
+
+# ======================================================================
+# cache templates
+# ======================================================================
+
+
+def cache_template(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16) -> PyTree:
+    """ShapeDtypeStruct pytree for the decode cache (stacked over blocks)."""
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim_
+    d_inner, G, N, H, Pd, conv_ch, _ = mamba_lib._dims(cfg) if cfg.ssm_state else (0,) * 7
+    C = cache_len if cfg.sliding_window == 0 else min(cache_len, cfg.sliding_window)
+    nb = cfg.n_blocks
+
+    def sds(shape, dt=dtype):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    slots = []
+    for mixer, _ in cfg.layer_plan():
+        if mixer == "attn":
+            slot = {
+                "k": sds((nb, batch, C, KV, Dh)),
+                "v": sds((nb, batch, C, KV, Dh)),
+            }
+            if cfg.is_encdec:
+                slot["xk"] = sds((nb, batch, cache_len, KV, Dh))
+                slot["xv"] = sds((nb, batch, cache_len, KV, Dh))
+        else:
+            slot = {
+                "conv": sds((nb, batch, cfg.ssm_conv - 1, conv_ch)),
+                "ssm": sds((nb, batch, H, N, Pd), jnp.float32),
+            }
+        slots.append(slot)
+    return slots
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16) -> PyTree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_template(cfg, batch, cache_len, dtype))
+
+
+def pad_cache(cfg: ModelConfig, cache: PyTree, capacity: int) -> PyTree:
+    """Grow a prefill cache's KV capacity to ``capacity`` rows (serving).
+
+    Prefill returns attention caches of exactly the prompt length.  Decode
+    writes token ``pos`` at ring index ``pos % C``, so the capacity must be
+    the serving target length, not the prompt length.  Linear-layout caches
+    (no SWA, or prompt <= window) zero-pad at the tail: position ``p`` stays
+    at index ``p``, and decode's ``valid_len`` masks the unwritten rows.
+    SWA ring caches at full window size (C == sliding_window) are returned
+    unchanged — the ring invariant ``index = p % window`` already holds and
+    MUST NOT be padded.
+    """
+
+    # SWA caches never exceed the window: the ring (index = p % W) provides
+    # eviction, and decode applies no explicit window mask.  A prompt cache
+    # of C <= W rows is linear (p % W == p), so padding it to exactly W
+    # preserves the ring invariant.
+    target = min(capacity, cfg.sliding_window) if cfg.sliding_window else capacity
+
+    def grow(x, axis):
+        C = x.shape[axis]
+        if C >= target:
+            return x
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, target - C)
+        return jnp.pad(x, pad)
+
+    def one_slot(slot):
+        out = dict(slot)
+        for k in ("k", "v"):
+            if k in out:
+                out[k] = grow(out[k], axis=2)  # (layers, B, C, KV, Dh)
+        return out
+
+    return [one_slot(s) for s in cache]
+
+
+# ======================================================================
+# encoder (whisper)
+# ======================================================================
+
+
+def encode(cfg: ModelConfig, params: PyTree, frames: jax.Array) -> jax.Array:
+    """frames: (B, S, d_model) stubbed frontend embeddings -> encoder states."""
+    enc = params["encoder"]
+    B, S, d = frames.shape
+    x = frames @ enc["frames_proj"].astype(frames.dtype)
+    x = x + sinusoid_positions(S, d).astype(x.dtype)
+    positions = jnp.arange(S)
+
+    def body(x, p):
+        x = constrain(x, ("batch", "seq", None))
+        x, _ = attn_full(cfg, p[0]["mixer"], x, positions=positions, causal=False)
+        x = mlp_sublayer(cfg, p[0]["ffn"], x)
+        return x, None
+
+    x, _ = maybe_scan(body, x, enc["blocks"])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+# ======================================================================
+# full-sequence forward (train / prefill)
+# ======================================================================
+
+
+def _embed(cfg, params, tokens, vision_embeds=None):
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    if cfg.scale_embeds:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.vision_tokens and vision_embeds is not None:
+        # VLM: image patch embeddings occupy the first `vision_tokens` slots
+        VT = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, VT:]], axis=1)
+    if cfg.is_encdec and cfg.rope_type == "none":
+        x = x + sinusoid_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    return x
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    return x @ w
+
+
+def forward(
+    cfg: ModelConfig,
+    params: PyTree,
+    tokens: jax.Array,
+    *,
+    vision_embeds: Optional[jax.Array] = None,
+    mrope_pos: Optional[jax.Array] = None,
+    frames: Optional[jax.Array] = None,
+    remat: bool = False,
+    attn_impl: str = "jnp",
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits, moe_aux_loss).
+
+    ``return_hidden=True`` returns the final-norm hidden states instead of
+    logits — the loss then runs vocab-sharded chunked cross-entropy without
+    ever materializing the (B, S, V) logits (see ``train.step``).
+    """
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens, vision_embeds)
+    positions = jnp.arange(S)
+    enc_out = encode(cfg, params, frames) if cfg.is_encdec else None
+    plan = cfg.layer_plan()
+
+    def body(carry, slot_params):
+        x, aux = carry
+        x = constrain(x, ("batch", "seq", None))  # keep batch sharded in-loop
+        for i, (mixer, ffn) in enumerate(plan):
+            sp = slot_params[i]
+            if mixer == "attn":
+                x, _ = attn_full(
+                    cfg, sp["mixer"], x, positions=positions,
+                    mrope_pos=mrope_pos, attn_impl=attn_impl,
+                )
+                if cfg.is_encdec:
+                    xkv = _build_xkv(cfg, sp["xattn"], enc_out)
+                    x = xattn_full(cfg, sp["xattn"], x, xkv)
+            else:
+                x, _ = mamba_full(cfg, sp["mixer"], x)
+            if ffn == "mlp":
+                x = mlp_sublayer(cfg, sp["ffn"], x)
+            elif ffn == "moe":
+                x, a = moe_sublayer(cfg, sp["ffn"], x)
+                aux = aux + a
+        return (x, aux), None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    (x, aux), _ = maybe_scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    if return_hidden:
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+    return _logits(cfg, params, x), aux
+
+
+def head_weight(cfg: ModelConfig, params: PyTree) -> jax.Array:
+    """(d, V) LM-head weight (transposed embedding when tied)."""
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ======================================================================
+# prefill: full-sequence + cache construction
+# ======================================================================
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: PyTree,
+    tokens: jax.Array,
+    *,
+    vision_embeds: Optional[jax.Array] = None,
+    mrope_pos: Optional[jax.Array] = None,
+    frames: Optional[jax.Array] = None,
+    attn_impl: str = "jnp",
+    cache_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, PyTree]:
+    """Process the whole prompt; returns (last-token logits, decode cache).
+
+    The cache length equals the prompt length (ring-truncated to the sliding
+    window when the arch uses SWA).  enc-dec archs encode ``frames`` and
+    store per-layer cross-KV in the cache.
+    """
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens, vision_embeds)
+    positions = jnp.arange(S)
+    enc_out = encode(cfg, params, frames) if cfg.is_encdec else None
+    plan = cfg.layer_plan()
+    W = cfg.sliding_window
+
+    def body(carry, slot_params):
+        x, aux = carry
+        x = constrain(x, ("batch", "seq", None))
+        caches = []
+        for i, (mixer, ffn) in enumerate(plan):
+            sp = slot_params[i]
+            if mixer == "attn":
+                x, (k, v) = attn_full(
+                    cfg, sp["mixer"], x, positions=positions,
+                    mrope_pos=mrope_pos, attn_impl=attn_impl,
+                )
+                if W and S > W:
+                    # keep the trailing window, rolled so that absolute
+                    # position p lives at index p % W (ring layout)
+                    k, v = k[:, -W:], v[:, -W:]
+                    shift = jnp.mod(S - W, W)
+                    k = jnp.roll(k, shift, axis=1)
+                    v = jnp.roll(v, shift, axis=1)
+                slot_cache = {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+                if cfg.is_encdec:
+                    xk, xv = _build_xkv(cfg, sp["xattn"], enc_out)
+                    x = xattn_full(cfg, sp["xattn"], x, (xk, xv))
+                    slot_cache["xk"] = xk.astype(cache_dtype)
+                    slot_cache["xv"] = xv.astype(cache_dtype)
+            else:
+                x, mc = mamba_full(cfg, sp["mixer"], x, return_cache=True)
+                slot_cache = {"conv": mc.conv.astype(cache_dtype), "ssm": mc.ssm}
+            if ffn == "mlp":
+                x = mlp_sublayer(cfg, sp["ffn"], x)
+            elif ffn == "moe":
+                x, a = moe_sublayer(cfg, sp["ffn"], x)
+                aux = aux + a
+            caches.append(slot_cache)
+        return (x, aux), caches
+
+    (x, _aux), cache = maybe_scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits, cache
+
+
+# ======================================================================
+# decode
+# ======================================================================
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: PyTree,
+    cache: PyTree,
+    token: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, PyTree]:
+    """One decode step.  token: (B, 1) int32; pos: scalar absolute position.
+
+    Returns (logits (B, 1, V), updated cache).  The cache pytree has the
+    same structure/shapes as the input (donation-safe).
+    """
+    B = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = params["embed"].astype(jnp.bfloat16)[token]
+    if cfg.scale_embeds:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.is_encdec and cfg.rope_type == "none":
+        # learned/sinusoid positions: add each sequence's pos-th row
+        row = _sinusoid_row(pos, cfg.d_model).astype(x.dtype)  # (B, d)
+        x = x + row[:, None, :]
+    plan = cfg.layer_plan()
+
+    def body(x, xs):
+        slot_params, cache_in = xs
+        x = constrain(x, ("batch", "seq", None))
+        new_caches = []
+        for i, (mixer, ffn) in enumerate(plan):
+            sp, ci = slot_params[i], cache_in[i]
+            if mixer == "attn":
+                x, upd = attn_decode(
+                    cfg, sp["mixer"], x, {"k": ci["k"], "v": ci["v"]}, pos=pos
+                )
+                if cfg.is_encdec:
+                    x = xattn_decode(cfg, sp["xattn"], x, (ci["xk"], ci["xv"]))
+                    upd = dict(upd, xk=ci["xk"], xv=ci["xv"])
+            else:
+                mc = mamba_lib.MambaCache(conv=ci["conv"], ssm=ci["ssm"])
+                x, mc = mamba_decode_sub(cfg, sp["mixer"], x, mc)
+                upd = {"conv": mc.conv, "ssm": mc.ssm}
+            if ffn == "mlp":
+                x = mlp_sublayer(cfg, sp["ffn"], x)
+            elif ffn == "moe":
+                x, _ = moe_sublayer(cfg, sp["ffn"], x)
+            new_caches.append(upd)
+        return x, new_caches
+
+    x, new_cache = maybe_scan(body, x, (params["blocks"], cache))
+    return _logits(cfg, params, x), new_cache
+
+
+def _sinusoid_row(pos, d_model: int) -> jax.Array:
+    """pos (B,) -> (B, d_model) sinusoid embedding rows."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = pos.astype(jnp.float32)[:, None] * freq[None, :]  # (B, half)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ======================================================================
+# convenience: init
+# ======================================================================
+
+
+def init(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> PyTree:
+    return init_params(param_template(cfg), key, dtype)
+
+
+def template_structs(cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    return param_structs(param_template(cfg), dtype)

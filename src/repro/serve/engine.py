@@ -1,0 +1,131 @@
+"""Serving engine: continuous batching over prefill/decode steps.
+
+A fixed-slot decode batch (static shapes — SPMD-safe): each of B slots
+holds one in-flight sequence.  New requests prefill individually and their
+KV rows are spliced into free slots; finished sequences free their slot
+immediately (continuous batching a la Orca/vLLM, adapted to static-shape
+JAX: the decode step always runs the full B x 1 batch, masked by
+liveness).
+
+This is the reduced-scale runnable engine (examples/serve_demo.py); the
+production-mesh lowering of the same step functions is exercised by the
+dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.serve.steps import greedy_sample, make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 32
+    out: Optional[List[int]] = None
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        slots: int = 4,
+        max_len: int = 512,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+        self.cache = transformer.init_cache(cfg, slots, max_len)
+        self.live = np.zeros(slots, bool)
+        self.pos = np.zeros(slots, np.int64)
+        self.req: List[Optional[Request]] = [None] * slots
+        self.last_tok = np.zeros((slots, 1), np.int32)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.time()
+        req.out = []
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and not self.live.all():
+            slot = int(np.flatnonzero(~self.live)[0])
+            req = self.queue.pop(0)
+            logits, cache1 = self.prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt[None, :])}
+            )
+            cache1 = transformer.pad_cache(self.cfg, cache1, self.max_len)
+            # splice the prefilled rows into the batched cache at `slot`
+            self.cache = jax.tree.map(
+                lambda big, one: jax.lax.dynamic_update_slice(
+                    big,
+                    one.astype(big.dtype),
+                    (0, slot) + (0,) * (big.ndim - 2),
+                ),
+                self.cache,
+                cache1,
+            )
+            tok = int(np.asarray(greedy_sample(logits))[0, 0])
+            req.out.append(tok)
+            req.t_first = time.time()
+            self.live[slot] = True
+            self.pos[slot] = len(req.prompt)
+            self.req[slot] = req
+            self.last_tok[slot, 0] = tok
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> int:
+        """One engine iteration; returns number of live sequences."""
+        self._admit()
+        if not self.live.any():
+            return 0
+        # static-shape decode across all slots at once: each slot decodes
+        # at its own absolute position (pos vector), dead slots just write
+        # throwaway rows into their own cache lines.
+        logits, self.cache = self.decode(
+            self.params,
+            self.cache,
+            {
+                "token": jnp.asarray(self.last_tok),
+                "pos": jnp.asarray(self.pos, jnp.int32),
+            },
+        )
+        toks = np.asarray(greedy_sample(logits))
+        for slot in np.flatnonzero(self.live):
+            req = self.req[slot]
+            tok = int(toks[slot, 0])
+            req.out.append(tok)
+            self.last_tok[slot, 0] = tok
+            self.pos[slot] += 1
+            if len(req.out) >= req.max_new or self.pos[slot] >= self.max_len - 1:
+                req.done = True
+                req.t_done = time.time()
+                self.finished.append(req)
+                self.live[slot] = False
+                self.req[slot] = None
+        return int(self.live.sum())
+
+    def run(self) -> List[Request]:
+        while self.queue or self.live.any():
+            self.step()
+        return self.finished

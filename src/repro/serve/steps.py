@@ -1,0 +1,52 @@
+"""Serving step builders: prefill (prompt -> cache) and decode (one token).
+
+Both are pure jittable functions; the decode step donates the cache
+(in-place KV update under pjit).  The serving engine
+(``repro.serve.engine``) drives them with continuous batching.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+PyTree = Any
+
+
+def make_prefill_step(cfg: ModelConfig, *, attn_impl: str = "jnp") -> Callable:
+    def prefill_step(params, batch) -> Tuple[jax.Array, PyTree]:
+        logits, cache = transformer.prefill(
+            cfg,
+            params,
+            batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            mrope_pos=batch.get("mrope_pos"),
+            frames=batch.get("frames"),
+            attn_impl=attn_impl,
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, batch) -> Tuple[jax.Array, PyTree]:
+        logits, cache = transformer.decode_step(
+            cfg, params, cache, batch["token"], batch["pos"]
+        )
+        return logits, cache
+
+    return decode_step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+
+
+def temperature_sample(logits: jax.Array, key: jax.Array, temperature: float = 1.0) -> jax.Array:
+    g = jax.random.gumbel(key, logits[:, -1, :].shape)
+    return jnp.argmax(logits[:, -1, :] / temperature + g, axis=-1).astype(jnp.int32)[:, None]

@@ -1,0 +1,172 @@
+"""Training step: loss, grads, clipping, AdamW — one jittable function.
+
+The step is built per (config, hyperparams) by ``make_train_step``; the
+returned function is pure and pjit-friendly:
+
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+
+Mixed precision: params live in fp32 (optimizer math in fp32), activations
+and matmuls run in bf16 (casts happen at use inside the model).  Remat:
+every transformer block is a ``jax.checkpoint`` unit under ``lax.scan``
+(policy = nothing_saveable) so activation memory is O(one block).
+Optional gradient accumulation scans over microbatches.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import constrain
+from repro.models import transformer
+from repro.optim import adamw_update, clip_by_global_norm, cosine_schedule
+from repro.utils.unroll import maybe_scan
+
+PyTree = Any
+
+
+def chunked_softmax_xent(
+    hidden: jax.Array,
+    head_w: jax.Array,
+    targets: jax.Array,
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    """Mean next-token cross-entropy WITHOUT materializing (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's logits stay vocab-sharded
+    (``constrain`` hint) and are consumed by fused reductions:
+      * logsumexp via max/exp/sum over the (sharded) vocab dim,
+      * the gold logit via a one-hot contraction (no take_along_axis,
+        which would all-gather the sharded vocab dim).
+    The chunk body is rematerialized in the backward pass, where
+    d(logits) = softmax - onehot is recomputed and immediately contracted.
+    """
+    B, S, d = hidden.shape
+    V = head_w.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    hc = hidden.reshape(B, nc, chunk, d).swapaxes(0, 1)  # (nc, B, c, d)
+    tc = targets.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(acc, xt):
+        h, t = xt
+        # f32 accumulation straight out of the matmul — no separate convert;
+        # bf16 head compute-copy in the gathered-FSDP/vocab-sharded layout
+        wc = constrain(head_w.astype(h.dtype), (None, "vocab"))
+        logits = jnp.einsum(
+            "bcd,dv->bcv", h, wc, preferred_element_type=jnp.float32,
+        )
+        logits = constrain(logits, ("batch", None, "vocab"))
+        m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        onehot = (
+            jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2) == t[..., None]
+        )
+        gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        return acc + jnp.sum(lse - gold), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    total, _ = maybe_scan(body, jnp.float32(0.0), (hc, tc))
+    return total / (B * S)
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: PyTree,
+    batch: Dict[str, jax.Array],
+    *,
+    aux_weight: float = 0.01,
+    remat: bool = True,
+    attn_impl: str = "jnp",
+    loss_chunk: int = 512,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token cross-entropy (+ MoE load-balance aux)."""
+    hidden, aux = transformer.forward(
+        cfg,
+        params,
+        batch["inputs"],
+        vision_embeds=batch.get("vision_embeds"),
+        mrope_pos=batch.get("mrope_pos"),
+        frames=batch.get("frames"),
+        remat=remat,
+        attn_impl=attn_impl,
+        return_hidden=True,
+    )
+    xent = chunked_softmax_xent(
+        hidden,
+        transformer.head_weight(cfg, params),
+        batch["targets"],
+        chunk=loss_chunk,
+    )
+    loss = xent + aux_weight * aux
+    return loss, {"xent": xent, "moe_aux": aux}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+    accum: int = 1,
+    aux_weight: float = 0.01,
+    remat: bool = True,
+    attn_impl: str = "jnp",
+) -> Callable:
+    """Build the jittable train step (optionally with grad accumulation)."""
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(
+            cfg, p, b, aux_weight=aux_weight, remat=remat, attn_impl=attn_impl
+        ),
+        has_aux=True,
+    )
+
+    def compute_grads(params, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        # split the global batch into `accum` microbatches and scan
+        def micro(carry, mb):
+            acc_grads, acc_loss = carry
+            (loss, _m), grads = grad_fn(params, mb)
+            acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+            return (acc_grads, acc_loss + loss), None
+
+        def reshape(name, x):
+            if name == "mrope_pos":  # (3, B, S): batch on axis 1
+                r = x.reshape(x.shape[0], accum, x.shape[1] // accum, x.shape[2])
+                return jnp.moveaxis(r, 1, 0)  # (accum, 3, B/accum, S)
+            return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+        mbs = {k: reshape(k, v) for k, v in batch.items()}
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = maybe_scan(micro, (zero, jnp.float32(0.0)), mbs)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        loss = loss_sum / accum
+        return loss, {"xent": loss, "moe_aux": jnp.float32(0.0)}, grads
+
+    def step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = cosine_schedule(
+            opt_state.step,
+            peak_lr=peak_lr,
+            warmup_steps=warmup_steps,
+            total_steps=total_steps,
+        )
+        new_params, new_opt = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay
+        )
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_params, new_opt, metrics
+
+    return step

@@ -1,0 +1,74 @@
+"""Scan wrapper with a trace-time unroll switch.
+
+XLA's HloCostAnalysis counts a ``while`` body ONCE regardless of trip
+count, so FLOPs/bytes/collective numbers from a scanned model are useless
+for rooflines.  The dry-run cost pass therefore lowers small model variants
+under ``unroll_scans()`` — every ``maybe_scan`` in the model then emits
+straight-line code (a Python loop at trace time), making the HLO cost
+analysis exact.  Production lowering keeps ``lax.scan`` (small HLO, fast
+compiles).
+
+``maybe_scan`` is a drop-in for ``jax.lax.scan(f, init, xs)`` (the subset
+of the API the models use: xs pytree with equal leading dims, ys pytree or
+None).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_STATE = threading.local()
+
+
+def unrolling() -> bool:
+    return getattr(_STATE, "unroll", False)
+
+
+@contextlib.contextmanager
+def unroll_scans(enabled: bool = True):
+    prev = unrolling()
+    _STATE.unroll = enabled
+    try:
+        yield
+    finally:
+        _STATE.unroll = prev
+
+
+MAX_UNROLL = 8  # beyond this, keep the loop.  Set so the block stack, the
+# grad-accum loop and the 4k-train attention-chunk scan unroll (their bodies
+# carry the matmuls), while long inner scans stay looped: the SSD inter-chunk
+# state pass is elementwise noise, and the 32k-prefill attention chunk scan
+# is handled by the per-layer extrapolation (its body is counted once per
+# unrolled layer — see dryrun.scan_corrected_costs docstring caveat).
+
+
+def maybe_scan(f: Callable, init: Any, xs: Any, length: Optional[int] = None):
+    """lax.scan when tracing normally; an unrolled Python loop under
+    ``unroll_scans()`` (straight-line HLO for exact cost analysis)."""
+    if xs is None:
+        n = length
+    else:
+        leaves = jax.tree.leaves(xs)
+        n = leaves[0].shape[0] if leaves else length
+    if not unrolling() or n > MAX_UNROLL:
+        return jax.lax.scan(f, init, xs, length=length)
+
+    slices = (
+        [None] * n
+        if xs is None
+        else [jax.tree.map(lambda a: a[i], xs) for i in range(n)]
+    )
+
+    carry = init
+    ys = []
+    for s in slices:
+        carry, y = f(carry, s)
+        ys.append(y)
+    if ys and ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs, axis=0), *ys)
+    return carry, stacked

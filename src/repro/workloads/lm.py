@@ -1,0 +1,101 @@
+"""Export assigned LM architectures as IMC workloads (beyond-paper).
+
+Every *weight* GEMM of a ``ModelConfig`` becomes an IMC layer descriptor —
+derived from the same config object that drives the JAX model, so the DSE
+workload can never drift from the live model code.
+
+Mapping notes (DESIGN.md §Arch-applicability):
+* IMC crossbars hold *weights*; activation-activation products (attention
+  QK^T/PV, SSD state updates) execute on the digital periphery and are not
+  crossbar layers — standard practice in the IMC-accelerator literature.
+* ``mode="decode"`` exports per-token serving cost (M=1 per matmul);
+  ``mode="prefill"`` exports a full sequence (M=seq).
+* The conv stem of Mamba blocks is a depthwise layer (groups=channels),
+  exactly like MobileNet's dwconvs.
+* MoE: all experts' weights must be resident (capacity pressure — the
+  interesting IMC trade-off), but only ``topk`` experts fire per token, so
+  M is scaled by topk/n_experts on expert GEMMs.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.configs.base import ModelConfig
+
+Layer = Tuple[int, int, int, int, int, int]
+
+
+def _gemm(m: int, k: int, n: int, groups: int = 1, m_frac: float = 1.0) -> Layer:
+    m_eff = max(1, int(round(m * m_frac)))
+    return (m_eff, k, n, m * k, m_eff * n, groups)
+
+
+def lm_workload(cfg: ModelConfig, *, mode: str = "decode", seq: int = 1) -> List[Layer]:
+    assert mode in ("decode", "prefill")
+    M = 1 if mode == "decode" else seq
+    d, Dh = cfg.d_model, cfg.head_dim_
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    layers: List[Layer] = []
+
+    def attn_layers() -> List[Layer]:
+        return [
+            _gemm(M, d, H * Dh),      # wq
+            _gemm(M, d, KV * Dh),     # wk
+            _gemm(M, d, KV * Dh),     # wv
+            _gemm(M, H * Dh, d),      # wo
+        ]
+
+    def mlp_layers() -> List[Layer]:
+        return [
+            _gemm(M, d, cfg.d_ff),
+            _gemm(M, d, cfg.d_ff),
+            _gemm(M, cfg.d_ff, d),
+        ]
+
+    def moe_layers() -> List[Layer]:
+        f = cfg.moe_d_ff_
+        frac = cfg.topk / cfg.n_experts
+        out = [_gemm(M, d, cfg.n_experts)]  # router
+        for _ in range(cfg.n_experts):
+            out += [
+                _gemm(M, d, f, m_frac=frac),
+                _gemm(M, d, f, m_frac=frac),
+                _gemm(M, f, d, m_frac=frac),
+            ]
+        return out
+
+    def mamba_layers() -> List[Layer]:
+        from repro.models.mamba import _dims
+
+        d_inner, G, N, Hs, Pd, conv_ch, d_in_proj = _dims(cfg)
+        # NOTE: the 4-tap causal depthwise conv is NOT exported as a
+        # crossbar layer — groups == channels would demand one crossbar
+        # per channel (3k+ crossbars for 16 weights each), while 4-tap
+        # shift-mul-adds execute on the digital periphery like the SSD
+        # state updates and attention score ops (standard IMC practice;
+        # unlike MobileNet's 9–49-tap, hundreds-of-channels dwconvs which
+        # we DO map and which stress capacity by design).
+        return [
+            _gemm(M, d, d_in_proj),  # in_proj
+            _gemm(M, d_inner, d),    # out_proj
+        ]
+
+    per_layer = {
+        "attn": attn_layers,
+        "mamba": mamba_layers,
+        "mlp": mlp_layers,
+        "moe": moe_layers,
+        "none": lambda: [],
+    }
+    for _ in range(cfg.n_blocks):
+        for mixer, ffn in cfg.layer_plan():
+            layers += per_layer[mixer]()
+            if cfg.is_encdec and mixer == "attn":
+                layers += attn_layers()  # cross-attention projections
+            layers += per_layer[ffn]()
+    if cfg.is_encdec:
+        for _ in range(cfg.encoder_layers):
+            layers += attn_layers() + mlp_layers()
+    # LM head (embedding lookup is a table read, not a GEMM; the head is)
+    layers.append(_gemm(M, d, cfg.vocab_size))
+    return layers

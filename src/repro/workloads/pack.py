@@ -1,0 +1,48 @@
+"""Workload packing: list-of-layer-tables -> padded tensors for the JAX model.
+
+A set of W workloads becomes
+    feats (W, L_max, 6) float32   and   mask (W, L_max) bool
+so the joint `max_w` reduction and the per-layer cost sums are tensor ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSet:
+    names: Tuple[str, ...]
+    feats: jnp.ndarray  # (W, L_max, 6)
+    mask: jnp.ndarray  # (W, L_max)
+
+    @property
+    def n(self) -> int:
+        return len(self.names)
+
+    def subset(self, idx: Sequence[int]) -> "WorkloadSet":
+        idx = list(idx)
+        return WorkloadSet(
+            names=tuple(self.names[i] for i in idx),
+            feats=self.feats[np.array(idx)],
+            mask=self.mask[np.array(idx)],
+        )
+
+
+def pack_workloads(named_layers: Sequence[Tuple[str, List[Tuple]]]) -> WorkloadSet:
+    l_max = max(len(ls) for _, ls in named_layers)
+    W = len(named_layers)
+    feats = np.zeros((W, l_max, 6), np.float32)
+    mask = np.zeros((W, l_max), bool)
+    for i, (_, ls) in enumerate(named_layers):
+        arr = np.asarray(ls, np.float32)
+        feats[i, : len(ls)] = arr
+        mask[i, : len(ls)] = True
+    return WorkloadSet(
+        names=tuple(n for n, _ in named_layers),
+        feats=jnp.asarray(feats),
+        mask=jnp.asarray(mask),
+    )

@@ -1,0 +1,13 @@
+import os
+
+# NOTE: no XLA_FLAGS here on purpose — tests and benches must see the real
+# single CPU device; only launch/dryrun.py forces 512 host devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

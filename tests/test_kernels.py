@@ -1,0 +1,151 @@
+"""Pallas kernels: shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize(
+    "B,Sq,Skv,H,KV,D,causal,window",
+    [
+        (2, 128, 128, 4, 2, 64, True, 0),
+        (1, 256, 256, 8, 8, 64, True, 0),
+        (2, 128, 128, 4, 1, 80, True, 0),     # D padded to 128 lanes
+        (1, 256, 256, 4, 2, 64, True, 96),    # sliding window
+        (2, 100, 128, 4, 2, 64, True, 0),     # ragged Sq padding
+        (1, 64, 64, 2, 2, 128, True, 0),
+    ],
+)
+def test_flash_attention_sweep(B, Sq, Skv, H, KV, D, causal, window):
+    from repro.kernels.flash_attention import ops as fa
+    from repro.kernels.flash_attention.ref import attention_reference
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Skv, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Skv, KV, D), jnp.float32)
+    o_p = fa.flash_attention(q, k, v, causal=causal, window=window)
+    o_r = attention_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(o_p, o_r, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    from repro.kernels.flash_attention import ops as fa
+    from repro.kernels.flash_attention.ref import attention_reference
+
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(dtype)
+    o_p = fa.flash_attention(q, k, v)
+    o_r = attention_reference(q, k, v)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        o_p.astype(jnp.float32), o_r.astype(jnp.float32), atol=atol
+    )
+
+
+def test_flash_attention_matches_model_chunked():
+    """Pallas kernel == the model's portable chunked-jnp flash attention."""
+    from repro.kernels.flash_attention import ops as fa
+    from repro.models.attention import flash_attention as jnp_flash
+
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 256, 8, 64))
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
+    v = jax.random.normal(ks[2], (2, 256, 2, 64))
+    np.testing.assert_allclose(
+        fa.flash_attention(q, k, v), jnp_flash(q, k, v, chunk=64), atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------------- SSD
+@pytest.mark.parametrize(
+    "B,S,H,P,N,chunk",
+    [
+        (2, 256, 4, 64, 128, 128),
+        (1, 128, 8, 32, 64, 32),
+        (2, 64, 2, 16, 32, 64),
+        (1, 512, 4, 64, 128, 128),
+    ],
+)
+def test_ssd_pallas_sweep(B, S, H, P, N, chunk):
+    from repro.kernels.ssd_scan import ops, ref
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, 1, N))
+    Cm = jax.random.normal(ks[4], (B, S, 1, N))
+    y_p, h_p = ops.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    y_r, h_r = ref.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(y_p, y_r, atol=1e-4)
+    np.testing.assert_allclose(h_p, h_r, atol=1e-4)
+
+
+def test_ssd_chunked_equals_sequential():
+    """The chunked algorithm (and hence the kernel) == step-by-step scan."""
+    from repro.kernels.ssd_scan import ref
+
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    B, S, H, P, N, G = 2, 128, 4, 32, 64, 2
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y_c, h_c = ref.ssd_chunked(x, dt, A, Bm, Cm, chunk=32)
+    y_s, h_s = ref.ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(y_c, y_s, atol=2e-3)
+    np.testing.assert_allclose(h_c, h_s, atol=2e-3)
+
+
+def test_ssd_decode_consistent_with_scan():
+    """Running decode steps one-by-one reproduces the chunked output."""
+    from repro.kernels.ssd_scan import ref
+
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 5)
+    B, S, H, P, N = 1, 16, 2, 8, 16
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, 1, N))
+    Cm = jax.random.normal(ks[4], (B, S, 1, N))
+    y_c, h_c = ref.ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    h = jnp.zeros((B, H, N, P))
+    ys = []
+    for t in range(S):
+        y, h = ref.ssd_decode_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        ys.append(y)
+    y_d = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_d, y_c, atol=2e-3)
+    np.testing.assert_allclose(h, h_c, atol=2e-3)
+
+
+# ------------------------------------------------------------------ imc_eval
+def test_imc_eval_padding_edges():
+    """Odd population / layer counts exercise the pad+mask path."""
+    from repro.core import space
+    from repro.kernels.imc_eval import ref
+    from repro.kernels.imc_eval.kernel import imc_eval_pallas
+
+    key = jax.random.PRNGKey(0)
+    for P, L in [(1, 1), (7, 3), (129, 9), (130, 65)]:
+        g = space.random_genomes(key, P)
+        d = jnp.stack(list(space.decode(g)), axis=1)
+        feats = jnp.abs(jax.random.normal(key, (L, 6))) * 100 + 1
+        mask = jnp.ones((L,), bool)
+        e_r, l_r, x_r = ref.eval_one_workload(d, feats, mask)
+        e_p, l_p, x_p = imc_eval_pallas(d, feats, mask)
+        np.testing.assert_allclose(e_p, e_r, rtol=2e-5)
+        np.testing.assert_allclose(l_p, l_r, rtol=2e-5)
+        np.testing.assert_allclose(x_p, x_r, rtol=2e-5)

@@ -1,0 +1,146 @@
+"""Paper core: search space, GA operators, objectives, joint/separate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import space
+from repro.core.ga import _poly_mutation, _sbx, _tournament, run_ga
+from repro.core.objectives import OBJECTIVES, make_objective
+from repro.core.search import (
+    joint_search,
+    largest_workload_index,
+    rescore_designs,
+    seed_population,
+    separate_search,
+)
+from repro.imc.cost import evaluate_designs
+from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+from repro.workloads.pack import pack_workloads
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+
+
+# ---------------------------------------------------------------- search space
+def test_space_size_matches_paper():
+    # paper Sec. III-B: ~1.9e7 configurations
+    assert 1.8e7 < space.SPACE_SIZE < 2.0e7
+
+
+def test_decode_hits_every_grid_value():
+    for i, f in enumerate(space.FIELDS):
+        n = len(space.SPACE[f])
+        g = np.full((n, space.N_GENES), 0.5, np.float32)
+        g[:, i] = (np.arange(n) + 0.5) / n
+        vals = np.asarray(getattr(space.decode(jnp.asarray(g)), f))
+        np.testing.assert_allclose(vals, space.SPACE[f], rtol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_genome_roundtrip(seed):
+    g = space.random_genomes(jax.random.PRNGKey(seed), 16)
+    idx = space.decode_indices(g)
+    g2 = space.genome_from_indices(np.asarray(idx))
+    idx2 = space.decode_indices(jnp.asarray(g2, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx2))
+
+
+# ---------------------------------------------------------------- GA operators
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_sbx_bounds_and_mean(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p1 = jax.random.uniform(k1, (64, space.N_GENES))
+    p2 = jax.random.uniform(k2, (64, space.N_GENES))
+    c1, c2 = _sbx(k3, p1, p2, eta=3.0, prob=0.95)
+    assert float(c1.min()) >= 0.0 and float(c1.max()) < 1.0
+    assert float(c2.min()) >= 0.0 and float(c2.max()) < 1.0
+    # SBX preserves the parent-pair mean wherever the [0,1) clip didn't bind
+    c1n, c2n = np.asarray(c1), np.asarray(c2)
+    interior = (c1n > 1e-6) & (c1n < 1 - 1e-6) & (c2n > 1e-6) & (c2n < 1 - 1e-6)
+    np.testing.assert_allclose(
+        (c1n + c2n)[interior], np.asarray(p1 + p2)[interior], atol=1e-4
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_poly_mutation_in_bounds(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (64, space.N_GENES))
+    y = _poly_mutation(key, x, eta=3.0, prob=1.0)
+    assert float(y.min()) >= 0.0 and float(y.max()) < 1.0
+
+
+def test_tournament_prefers_better():
+    scores = jnp.asarray([0.0, 1.0, 2.0, 3.0])
+    winners = _tournament(jax.random.PRNGKey(0), scores, 256)
+    # winner of each pair has the lower score -> mean winner score below mean
+    assert float(scores[winners].mean()) < float(scores.mean())
+
+
+def test_ga_monotone_convergence(ws):
+    key = jax.random.PRNGKey(0)
+    res = joint_search(key, ws, pop_size=16, generations=4)
+    conv = res.convergence
+    assert (np.diff(conv[np.isfinite(conv)]) <= 1e-6).all()
+
+
+# ----------------------------------------------------------------- objectives
+def test_objectives_inf_on_infeasible(ws):
+    g = space.random_genomes(jax.random.PRNGKey(0), 256)
+    r = evaluate_designs(space.decode(g), ws)
+    for kind in OBJECTIVES:
+        s = make_objective(kind, 150.0)(r)
+        feasible = np.asarray(r.fits.all(-1) & r.valid & (r.area_mm2 <= 150.0))
+        assert (np.isfinite(np.asarray(s)) == feasible).all()
+
+
+def test_area_constraint_binds(ws):
+    g = space.random_genomes(jax.random.PRNGKey(1), 512)
+    r = evaluate_designs(space.decode(g), ws)
+    s_tight = make_objective("ela", 50.0)(r)
+    s_loose = make_objective("ela", 1e9)(r)
+    assert np.isfinite(np.asarray(s_loose)).sum() >= np.isfinite(np.asarray(s_tight)).sum()
+
+
+# ------------------------------------------------------------ search behaviour
+def test_seed_population_fits_largest(ws):
+    pop = seed_population(jax.random.PRNGKey(0), ws, 16)
+    wl = ws.subset([largest_workload_index(ws)])
+    r = evaluate_designs(space.decode(pop), wl)
+    assert bool(r.fits[:, 0].all()) and bool(r.valid.all())
+
+
+def test_largest_workload_is_vgg16(ws):
+    assert ws.names[largest_workload_index(ws)] == "vgg16"
+
+
+def test_joint_beats_or_ties_separate_on_set(ws):
+    """The paper's core claim, in miniature: re-scored on ALL workloads,
+    the joint search's best is at least as good as every separate search's
+    best (and most separate winners fail outright)."""
+    key = jax.random.PRNGKey(0)
+    joint = joint_search(key, ws, pop_size=24, generations=6)
+    sep = separate_search(jax.random.PRNGKey(1), ws, pop_size=24, generations=6)
+    jbest = joint.top_scores[0]
+    for name, r in sep.items():
+        if not len(r.top_genomes):
+            continue
+        s_all, _ = rescore_designs(r.top_genomes, ws)
+        s_all = s_all[np.isfinite(s_all)]
+        if len(s_all):
+            assert jbest <= s_all.min() * 1.05  # joint no worse (5% slack)
+
+
+def test_rescore_identity(ws):
+    res = joint_search(jax.random.PRNGKey(0), ws, pop_size=16, generations=3)
+    s, _ = rescore_designs(res.top_genomes, ws)
+    np.testing.assert_allclose(s, res.top_scores, rtol=1e-5)

@@ -1,0 +1,127 @@
+"""Assemble the data-driven sections of EXPERIMENTS.md from experiments/*.json.
+
+    PYTHONPATH=src python tools/make_report.py > /tmp/report_sections.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+EXP = ROOT / "experiments"
+SINGLE = "data=16xmodel=16"
+MULTI = "pod=2xdata=16xmodel=16"
+
+
+def load(mesh):
+    recs = []
+    d = EXP / "dryrun" / mesh
+    if d.exists():
+        for p in sorted(d.glob("*.json")):
+            if p.name.startswith("paper-dse"):
+                continue
+            recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def dryrun_table(mesh):
+    rows = [
+        "| cell | chips | fits | mem/dev (GiB) | FLOPs/dev | bytes/dev | coll bytes/dev | compile (s) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        fits = "yes" if r["memory"]["per_device_gb"] <= 16.0 else f"**{r['memory']['per_device_gb']:.0f}G**"
+        rows.append(
+            f"| {r['cell']} | {r['chips']} | {fits} | {r['memory']['per_device_gb']:.2f} "
+            f"| {r['cost']['flops_per_device']:.2e} | {r['cost']['bytes_per_device']:.2e} "
+            f"| {r['collectives']['total_bytes']:.2e} | {r['compile_s']:.0f} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table():
+    rows = [
+        "| cell | t_compute (ms) | t_memory (ms) | t_coll (ms) | bottleneck | useful 6ND/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in load(SINGLE):
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['cell']} | {rf['t_compute_s']*1e3:.2f} | {rf['t_memory_s']*1e3:.2f} "
+            f"| {rf['t_collective_s']*1e3:.2f} | {rf['bottleneck']} "
+            f"| {rf['useful_ratio']:.2f} | {rf['peak_fraction']:.1%} |"
+        )
+    return "\n".join(rows)
+
+
+def fig2_summary():
+    p = EXP / "fig2_joint_vs_separate.json"
+    if not p.exists():
+        return "(run benchmarks first)"
+    d = json.loads(p.read_text())
+    lines = []
+    for s in d["seeds"]:
+        imp = s["joint_vs_largest_improvement"]
+        fails = s["separate_failed_frac"]
+        lines.append(
+            f"- seed {s['seed']}: joint best {s['joint_top10'][0]:.3g}; "
+            f"separate failed-design %: "
+            + ", ".join(f"{k} {v:.0%}" for k, v in fails.items())
+            + "; joint-vs-vgg16-chip improvement: "
+            + ", ".join(
+                f"{k} {'fail' if v is None or v != v else f'{v:.0%}'}"
+                for k, v in imp.items()
+            )
+        )
+    return "\n".join(lines)
+
+
+def fig3_summary():
+    p = EXP / "fig3_generalization.json"
+    if not p.exists():
+        return "(run benchmarks first)"
+    d = json.loads(p.read_text())
+    rows = ["| objective | joint best | generalization loss per workload |", "|---|---|---|"]
+    for obj, e in d.items():
+        loss = ", ".join(f"{k} {v:.0%}" for k, v in e["generalization_loss"].items())
+        rows.append(f"| {obj} | {e['joint_best']:.3g} | {loss} |")
+    return "\n".join(rows)
+
+
+def throughput_summary():
+    p = EXP / "throughput.json"
+    if not p.exists():
+        return "(run benchmarks first)"
+    d = json.loads(p.read_text())
+    lines = []
+    for e in d["eval"]:
+        lines.append(
+            f"- pop {e['pop']}: {e['designs_per_s']:.0f} designs/s "
+            f"({e['speedup_vs_paper']:.0f}x the paper's 1/36 s^-1)"
+        )
+    for e in d["ga"]:
+        lines.append(
+            f"- full GA P={e['pop']} G={e['gens']}: {e['s']:.2f}s "
+            f"(paper: ~14,400s on 64 cores)"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### single-pod (16x16 = 256 chips)\n")
+        print(dryrun_table(SINGLE))
+        print("\n### multi-pod (2x16x16 = 512 chips)\n")
+        print(dryrun_table(MULTI))
+    if which in ("all", "roofline"):
+        print("\n### roofline\n")
+        print(roofline_table())
+    if which in ("all", "paper"):
+        print("\n### fig2\n")
+        print(fig2_summary())
+        print("\n### fig3\n")
+        print(fig3_summary())
+        print("\n### throughput\n")
+        print(throughput_summary())
