@@ -1,9 +1,15 @@
-"""Paper Fig. 3: generalization score-loss across objectives.
+"""Paper Fig. 3: generalization score-loss across objectives — batched.
 
 For each objective in {ela, edp, e, l}: joint search + per-workload
 separate searches from the SAME seeded initial population; normalize
 scores to the joint best; report the % score loss of the generalized
 design vs each workload-specific design, and the joint convergence curve.
+
+The exponent-weighted objective (E^wE * L^wL * A^wA with traced weights,
+``core.objectives.make_weighted_objective``) makes the objective a traced
+INPUT rather than four traced programs — the whole figure is TWO batched
+XLA launches: one for the 4 joint searches (batch = objectives) and one
+for the 16 separate searches (batch = objectives x workloads).
 """
 from __future__ import annotations
 
@@ -12,10 +18,11 @@ import time
 from typing import Dict
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.objectives import OBJECTIVES
-from repro.core.search import run_search, seed_population
+from repro.core.objectives import OBJECTIVES, OBJECTIVE_WEIGHTS
+from repro.core.search import batched_search, seed_population
 from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
 from repro.workloads.pack import pack_workloads
 
@@ -25,33 +32,57 @@ AREA = 150.0
 
 def run(seed: int = 0, verbose: bool = True) -> dict:
     ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    W, n_obj = ws.n, len(OBJECTIVES)
     key = jax.random.PRNGKey(seed)
     init = seed_population(key, ws, POP)  # same initial architectures for all
-    out = {}
+    weights = jnp.asarray([OBJECTIVE_WEIGHTS[o] for o in OBJECTIVES], jnp.float32)
+    ga_key = jax.random.PRNGKey(seed + 7)
 
-    for obj in OBJECTIVES:
-        t0 = time.time()
-        joint = run_search(
-            jax.random.PRNGKey(seed + 7), ws,
-            objective=obj, area_constr=AREA,
-            pop_size=POP, generations=GENS, top_k=TOPK,
-            init_genomes=init,
-        )
+    t0 = time.time()
+    # joint: batch = objectives (every element same key + init, as in the
+    # sequential protocol — only the objective weights differ)
+    joints = batched_search(
+        jnp.tile(ga_key[None], (n_obj, 1)),
+        jnp.broadcast_to(ws.feats[None], (n_obj,) + ws.feats.shape),
+        jnp.broadcast_to(ws.mask[None], (n_obj,) + ws.mask.shape),
+        names=ws.names,
+        obj_weights=weights,
+        area_constr=AREA,
+        pop_size=POP,
+        generations=GENS,
+        top_k=TOPK,
+        init_genomes=jnp.tile(init[None], (n_obj, 1, 1)),
+    )
+    # separate: batch = objectives x workloads (objective-major)
+    seps = batched_search(
+        jnp.tile(ga_key[None], (n_obj * W, 1)),
+        jnp.tile(ws.feats[:, None], (n_obj, 1, 1, 1)),
+        jnp.tile(ws.mask[:, None], (n_obj, 1, 1)),
+        names=[(n,) for n in ws.names] * n_obj,
+        obj_weights=jnp.repeat(weights, W, axis=0),
+        area_constr=AREA,
+        pop_size=POP,
+        generations=GENS,
+        top_k=TOPK,
+        init_genomes=jnp.tile(init[None], (n_obj * W, 1, 1)),
+    )
+    wall = time.time() - t0
+
+    from benchmarks.bench_joint_vs_separate import per_workload_scores
+
+    out = {}
+    for oi, obj in enumerate(OBJECTIVES):
+        joint = joints[oi]
         jbest = float(joint.top_scores[0]) if len(joint.top_scores) else float("inf")
         losses: Dict[str, float] = {}
         for i, name in enumerate(ws.names):
-            sep = run_search(
-                jax.random.PRNGKey(seed + 7), ws.subset([i]),
-                objective=obj, area_constr=AREA,
-                pop_size=POP, generations=GENS, top_k=TOPK,
-                init_genomes=init,
-            )
+            sep = seps[oi * W + i]
             if len(sep.top_scores):
                 # loss of generality: how much worse the generalized chip is
                 # on THIS workload than its workload-specific optimum.
-                from benchmarks.bench_joint_vs_separate import per_workload_scores
-
-                joint_on_w = per_workload_scores(joint.top_genomes[0], ws, AREA)[name]
+                joint_on_w = per_workload_scores(
+                    joint.top_genomes[0], ws, AREA, objective=obj
+                )[name] if len(joint.top_genomes) else float("inf")
                 losses[name] = 1.0 - float(sep.top_scores[0]) / joint_on_w \
                     if np.isfinite(joint_on_w) else float("nan")
         out[obj] = {
@@ -59,15 +90,20 @@ def run(seed: int = 0, verbose: bool = True) -> dict:
             "joint_top10_norm": [float(s) / jbest for s in joint.top_scores],
             "convergence": [float(c) for c in joint.convergence],
             "generalization_loss": losses,
-            "wall_s": time.time() - t0,
+            "wall_s": wall / n_obj,
         }
         if verbose:
             print(f"[fig3 {obj:4s}] joint best {jbest:.3g}; loss vs specific: "
                   f"{ {k: f'{v:.0%}' for k, v in losses.items()} }")
+    if verbose:
+        print(f"[fig3] total wall {wall:.1f}s for {n_obj * (1 + W)} searches "
+              f"in 2 XLA programs")
     return out
 
 
 if __name__ == "__main__":
+    from benchmarks.run import exp_dir
+
     res = run()
-    with open("experiments/fig3_generalization.json", "w") as f:
+    with open(exp_dir() / "fig3_generalization.json", "w") as f:
         json.dump(res, f, indent=1)

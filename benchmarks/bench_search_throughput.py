@@ -1,0 +1,101 @@
+"""Tracked search-throughput benchmark — the repo's perf trajectory.
+
+End-to-end DSE throughput of the batched one-jit search stack at the
+paper's operating point (P=40, G=10, 4-CNN workload set):
+
+  * multi-seed joint search (``joint_search_batched``): cold (first call,
+    includes trace+compile) and warm (cached program) wall time,
+  * all-seeds x all-workloads separate search in one program,
+  * designs-evaluated/sec for both, vs the paper's ~36 s/design.
+
+``benchmarks/run.py`` writes the result to
+``experiments/search_throughput.json`` so future PRs can diff the
+trajectory.  The paper's 4 h for the same P x G search is the 1x line.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.search import batched_search, joint_search_batched
+from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+from repro.workloads.pack import pack_workloads
+
+PAPER_S_PER_DESIGN = 36.0
+POP, GENS = 40, 10
+
+
+def _block(results) -> None:
+    jax.block_until_ready([r.ga.scores for r in results])
+
+
+def run(quick: bool = False, verbose: bool = True) -> dict:
+    ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    seeds = 2 if quick else 5
+    per_search = POP * (GENS + 1)
+    out = {
+        "pop": POP, "gens": GENS, "seeds": seeds,
+        "paper_s_per_design": PAPER_S_PER_DESIGN,
+    }
+
+    def keys(base):
+        return jnp.stack([jax.random.PRNGKey(base + s) for s in range(seeds)])
+
+    t0 = time.time()
+    _block(joint_search_batched(keys(0), ws, pop_size=POP, generations=GENS))
+    cold = time.time() - t0
+    t0 = time.time()
+    _block(joint_search_batched(keys(1000), ws, pop_size=POP, generations=GENS))
+    warm = time.time() - t0
+    n = seeds * per_search
+    out["joint"] = {
+        "searches": seeds,
+        "cold_s": cold,  # includes trace + XLA compile
+        "warm_s": warm,  # cached program: the steady-state number
+        "designs_per_s": n / warm,
+        "speedup_vs_paper": (n / warm) * PAPER_S_PER_DESIGN,
+    }
+    if verbose:
+        print(f"[search-thru] joint x{seeds}: cold {cold:.2f}s, warm {warm:.2f}s "
+              f"-> {n/warm:.0f} designs/s ({n/warm*PAPER_S_PER_DESIGN:.0f}x paper)")
+
+    W = ws.n
+    sep_feats = jnp.tile(ws.feats[:, None], (seeds, 1, 1, 1))
+    sep_mask = jnp.tile(ws.mask[:, None], (seeds, 1, 1))
+
+    def sep_keys(base):
+        return jnp.concatenate(
+            [jax.random.split(jax.random.PRNGKey(base + s), W) for s in range(seeds)]
+        )
+
+    t0 = time.time()
+    _block(batched_search(sep_keys(0), sep_feats, sep_mask,
+                          pop_size=POP, generations=GENS))
+    cold = time.time() - t0
+    t0 = time.time()
+    _block(batched_search(sep_keys(1000), sep_feats, sep_mask,
+                          pop_size=POP, generations=GENS))
+    warm = time.time() - t0
+    n = seeds * W * per_search
+    out["separate"] = {
+        "searches": seeds * W,
+        "cold_s": cold,
+        "warm_s": warm,
+        "designs_per_s": n / warm,
+        "speedup_vs_paper": (n / warm) * PAPER_S_PER_DESIGN,
+    }
+    if verbose:
+        print(f"[search-thru] separate x{seeds*W}: cold {cold:.2f}s, warm {warm:.2f}s "
+              f"-> {n/warm:.0f} designs/s ({n/warm*PAPER_S_PER_DESIGN:.0f}x paper)")
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.run import exp_dir
+
+    res = run()
+    with open(exp_dir() / "search_throughput.json", "w") as f:
+        json.dump(res, f, indent=1)

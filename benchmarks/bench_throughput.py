@@ -58,8 +58,9 @@ def run(verbose: bool = True) -> dict:
     eval_fn = make_eval_fn(ws, "ela", 150.0)
     init = seed_population(jax.random.PRNGKey(1), ws, 40)
     def ga_run():
+        # run_ga donates its init buffer -> hand it a fresh copy per call
         return run_ga(jax.random.PRNGKey(2), eval_fn, pop_size=40,
-                      generations=10, init_genomes=init).best_score
+                      generations=10, init_genomes=jnp.array(init)).best_score
     dt = _time(ga_run, n=2)
     n_designs = 40 * 11
     out["ga"].append({"pop": 40, "gens": 10, "s": dt,
@@ -71,6 +72,8 @@ def run(verbose: bool = True) -> dict:
 
 
 if __name__ == "__main__":
+    from benchmarks.run import exp_dir
+
     res = run()
-    with open("experiments/throughput.json", "w") as f:
+    with open(exp_dir() / "throughput.json", "w") as f:
         json.dump(res, f, indent=1)

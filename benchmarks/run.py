@@ -3,6 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run [--quick]
 
 Writes machine-readable results under experiments/ and prints a summary.
+``experiments/search_throughput.json`` is the repo's tracked perf
+trajectory (designs-evaluated/sec + end-to-end search wall time).
 """
 from __future__ import annotations
 
@@ -15,16 +17,24 @@ from pathlib import Path
 EXP = Path(__file__).resolve().parents[1] / "experiments"
 
 
+def exp_dir() -> Path:
+    """The experiments/ output dir, created on demand.  Shared by every
+    bench's ``__main__`` block so they can be run directly."""
+    EXP.mkdir(exist_ok=True)
+    return EXP
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="1 seed instead of 5")
     args = ap.parse_args(argv)
-    EXP.mkdir(exist_ok=True)
+    exp_dir()
 
     from benchmarks import (
         bench_generalization,
         bench_joint_vs_separate,
         bench_kernels,
+        bench_search_throughput,
         bench_throughput,
     )
 
@@ -38,6 +48,11 @@ def main(argv=None) -> int:
     thru = bench_throughput.run()
     with open(EXP / "throughput.json", "w") as f:
         json.dump(thru, f, indent=1)
+
+    print("\n== search throughput (batched one-jit stack; tracked trajectory) ==")
+    sthru = bench_search_throughput.run(quick=args.quick)
+    with open(EXP / "search_throughput.json", "w") as f:
+        json.dump(sthru, f, indent=1)
 
     print("\n== Fig. 2: joint vs separate ==")
     fig2 = bench_joint_vs_separate.run(seeds=1 if args.quick else 5)

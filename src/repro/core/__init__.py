@@ -7,13 +7,21 @@
 * ``distributed``— population evaluation sharded over the mesh
 """
 from repro.core import space  # noqa: F401
-from repro.core.ga import GAResult, run_ga  # noqa: F401
-from repro.core.objectives import OBJECTIVES, make_objective  # noqa: F401
+from repro.core.ga import GAResult, run_ga, run_ga_batched  # noqa: F401
+from repro.core.objectives import (  # noqa: F401
+    OBJECTIVES,
+    OBJECTIVE_WEIGHTS,
+    make_objective,
+    make_weighted_objective,
+)
 from repro.core.search import (  # noqa: F401
     SearchResult,
+    batched_search,
     joint_search,
+    joint_search_batched,
     rescore_designs,
     run_search,
     seed_population,
+    seed_population_batched,
     separate_search,
 )

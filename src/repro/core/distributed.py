@@ -11,6 +11,13 @@ needs only the (P,) score vector (all-gathered — bytes, not tensors).
 whose population batch is annotated with a ``data``-axis sharding; GSPMD
 partitions the whole eval.  Used by the multi-pod DSE dry-run
 (launch/dryrun.py --paper) and the throughput benchmark.
+
+Interaction with the batched one-jit search stack (``core.search``): the
+vmapped ``run_ga_batched`` adds a leading batch axis (workloads / seeds)
+*on top of* the population axis.  Sharding the population axis per GA
+composes with that today; sharding the BATCH axis itself over pods (one
+pod per seed, W pods for W separate searches) is the remaining open item
+tracked in ROADMAP.md.
 """
 from __future__ import annotations
 
@@ -23,7 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import space
 from repro.core.objectives import make_objective
-from repro.imc.cost import evaluate_designs
+from repro.imc.cost import evaluate_designs_arrays
 from repro.imc.tech import TECH, TechParams
 from repro.workloads.pack import WorkloadSet
 
@@ -40,11 +47,12 @@ def sharded_eval_fn(
     pop_sharding = NamedSharding(mesh, P(axes, None))
     out_sharding = NamedSharding(mesh, P(axes))
     obj = make_objective(objective, area_constr)
+    feats, mask = ws.feats, ws.mask
 
     @jax.jit
     def eval_fn(genomes: jnp.ndarray) -> jnp.ndarray:
         genomes = jax.lax.with_sharding_constraint(genomes, pop_sharding)
-        scores = obj(evaluate_designs(space.decode(genomes), ws, tech))
+        scores = obj(evaluate_designs_arrays(space.decode(genomes), feats, mask, tech))
         return jax.lax.with_sharding_constraint(scores, out_sharding)
 
     return eval_fn

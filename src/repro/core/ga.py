@@ -7,10 +7,20 @@ pymoo-equivalent operators [33][34]:
   * polynomial mutation         (p_m = 1/n_genes, eta = 3),
   * (mu + lambda) elitist survival,
 with the whole G-generation loop under ``lax.scan`` and the population
-evaluated by the vectorized IMC cost model — one jit covers
-eval -> select -> SBX -> mutate -> survive.  Population history (every
+evaluated by the vectorized IMC cost model.  Population history (every
 sampled design + score, per generation) is returned, matching the paper's
 "best set selected from the stored population history".
+
+One jit covers the entire experiment, not just one generation:
+
+  * ``run_ga``          — eval -> select -> SBX -> mutate -> survive for all
+    G generations under a single cached, donated ``jax.jit``.  Workload
+    tensors enter as the traced ``ctx`` argument, so searching a different
+    workload set of the same shape reuses the compiled program — no
+    per-seed / per-workload retraces.
+  * ``run_ga_batched``  — the same program ``vmap``-ed over a leading batch
+    axis (workloads for ``separate_search``, seeds for the multi-seed
+    benchmark drivers): B independent GAs in ONE XLA launch.
 
 The evaluation callback is a parameter, so the same GA drives joint
 (multi-workload) and separate (single-workload) searches, and the
@@ -18,8 +28,9 @@ population axis can be sharded over the mesh (``repro.core.distributed``).
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
-from typing import Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +47,27 @@ class GAResult(NamedTuple):
     scores: jnp.ndarray  # (G+1, P)
     best_genome: jnp.ndarray  # (n,)
     best_score: jnp.ndarray  # ()
+
+
+class _IgnoreCtx:
+    """Adapt a ctx-less ``eval_fn(genomes)`` to the internal
+    ``eval_fn(genomes, ctx)`` convention.  Hash/eq delegate to the wrapped
+    callable so the cached jits below are NOT retraced when the same
+    evaluation function is reused across calls."""
+
+    __slots__ = ("fn",)
+
+    def __init__(self, fn: Callable):
+        self.fn = fn
+
+    def __call__(self, genomes, ctx):
+        return self.fn(genomes)
+
+    def __hash__(self):
+        return hash(self.fn)
+
+    def __eq__(self, other):
+        return isinstance(other, _IgnoreCtx) and self.fn == other.fn
 
 
 def _tournament(key, scores: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -79,37 +111,28 @@ def _poly_mutation(key, x: jnp.ndarray, eta: float, prob: float):
     return jnp.clip(jnp.where(do, x + delta, x), 0.0, 1.0 - 1e-7)
 
 
-def run_ga(
-    key: jax.Array,
-    eval_fn: Callable[[jnp.ndarray], jnp.ndarray],
-    *,
-    pop_size: int,
-    generations: int,
-    init_genomes: jnp.ndarray,
-    sbx_prob: float = SBX_PROB,
-    sbx_eta: float = SBX_ETA,
-    mut_eta: float = MUT_ETA,
+def _ga_core(
+    key, eval_fn, pop_size, generations, init_genomes, ctx,
+    sbx_prob, sbx_eta, mut_eta,
 ) -> GAResult:
-    """Run the GA.  ``eval_fn(genomes (P,n)) -> scores (P,)`` (lower=better).
-
-    ``init_genomes`` must already satisfy the paper's seeding rule (only
-    designs that fit the largest workload — see ``search.seed_population``).
-    """
     P = pop_size
-    n = space.N_GENES
+    n = init_genomes.shape[-1]
     mut_prob = 1.0 / n
-    s0 = eval_fn(init_genomes)
+    # odd P: select one extra pair and truncate the children back to P, so
+    # no parent slot is silently dropped and history shapes stay (G+1, P).
+    n_pairs = (P + 1) // 2
+    s0 = eval_fn(init_genomes, ctx)
 
     def gen(carry, k):
         pop, scores = carry
         k_sel, k_sbx, k_mut = jax.random.split(k, 3)
-        parents = _tournament(k_sel, scores, P)  # P parents -> P/2 pairs
-        p1 = pop[parents[: P // 2]]
-        p2 = pop[parents[P // 2 :]]
+        parents = _tournament(k_sel, scores, 2 * n_pairs)
+        p1 = pop[parents[:n_pairs]]
+        p2 = pop[parents[n_pairs:]]
         c1, c2 = _sbx(k_sbx, p1, p2, sbx_eta, sbx_prob)
-        children = jnp.concatenate([c1, c2], axis=0)
+        children = jnp.concatenate([c1, c2], axis=0)[:P]
         children = _poly_mutation(k_mut, children, mut_eta, mut_prob)
-        child_scores = eval_fn(children)
+        child_scores = eval_fn(children, ctx)
         # (mu + lambda) elitist survival
         allg = jnp.concatenate([pop, children], axis=0)
         alls = jnp.concatenate([scores, child_scores], axis=0)
@@ -130,3 +153,96 @@ def run_ga(
         best_genome=genomes_hist.reshape(-1, n)[best],
         best_score=flat_s[best],
     )
+
+
+_GA_STATICS = ("eval_fn", "pop_size", "generations", "sbx_prob", "sbx_eta", "mut_eta")
+
+
+@partial(jax.jit, static_argnames=_GA_STATICS, donate_argnames=("init_genomes",))
+def _run_ga_jit(key, init_genomes, ctx, *, eval_fn, pop_size, generations,
+                sbx_prob, sbx_eta, mut_eta):
+    return _ga_core(key, eval_fn, pop_size, generations, init_genomes, ctx,
+                    sbx_prob, sbx_eta, mut_eta)
+
+
+@partial(jax.jit, static_argnames=_GA_STATICS, donate_argnames=("init_genomes",))
+def _run_ga_batched_jit(keys, init_genomes, ctx, *, eval_fn, pop_size,
+                        generations, sbx_prob, sbx_eta, mut_eta):
+    def one(key, init, c):
+        return _ga_core(key, eval_fn, pop_size, generations, init, c,
+                        sbx_prob, sbx_eta, mut_eta)
+
+    ctx_axes = jax.tree_util.tree_map(lambda _: 0, ctx)
+    return jax.vmap(one, in_axes=(0, 0, ctx_axes))(keys, init_genomes, ctx)
+
+
+def run_ga(
+    key: jax.Array,
+    eval_fn: Callable,
+    *,
+    pop_size: int,
+    generations: int,
+    init_genomes: jnp.ndarray,
+    ctx: Any = None,
+    sbx_prob: float = SBX_PROB,
+    sbx_eta: float = SBX_ETA,
+    mut_eta: float = MUT_ETA,
+) -> GAResult:
+    """Run the GA as one cached jit.  Lower score = better.
+
+    ``eval_fn(genomes (P, n)) -> scores (P,)`` when ``ctx`` is ``None``, or
+    ``eval_fn(genomes, ctx) -> scores`` with ``ctx`` an arbitrary pytree of
+    traced arrays (e.g. packed workload tensors).  Pass workload data via
+    ``ctx`` and reuse the same ``eval_fn`` object to avoid retracing.
+
+    ``init_genomes`` must already satisfy the paper's seeding rule (only
+    designs that fit the largest workload — see ``search.seed_population``)
+    and is DONATED to XLA: pass a copy if the caller needs it afterwards.
+    """
+    if ctx is None and not isinstance(eval_fn, _IgnoreCtx):
+        eval_fn = _IgnoreCtx(eval_fn)
+    with warnings.catch_warnings():
+        # the full population history is returned, so no output ever aliases
+        # the donated init buffer on CPU — silence only that diagnostic
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        return _run_ga_jit(
+            key, init_genomes, ctx,
+            eval_fn=eval_fn, pop_size=int(pop_size), generations=int(generations),
+            sbx_prob=float(sbx_prob), sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
+        )
+
+
+def run_ga_batched(
+    keys: jnp.ndarray,
+    eval_fn: Callable,
+    *,
+    pop_size: int,
+    generations: int,
+    init_genomes: jnp.ndarray,
+    ctx: Any = None,
+    sbx_prob: float = SBX_PROB,
+    sbx_eta: float = SBX_ETA,
+    mut_eta: float = MUT_ETA,
+) -> GAResult:
+    """B independent GAs in one vmapped XLA program.
+
+    ``keys`` is a stacked (B, 2) PRNG-key array, ``init_genomes`` is
+    (B, P, n) (donated), and every leaf of ``ctx`` carries a leading batch
+    axis — one slice per GA (per-workload tensors for ``separate_search``,
+    broadcast copies for multi-seed search).  Returns a ``GAResult`` whose
+    fields all have a leading B axis.  Per-batch-element results match
+    ``run_ga(keys[b], ..., ctx=ctx[b])`` exactly (same RNG stream).
+    """
+    if ctx is None and not isinstance(eval_fn, _IgnoreCtx):
+        eval_fn = _IgnoreCtx(eval_fn)
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        return _run_ga_batched_jit(
+            keys, init_genomes, ctx,
+            eval_fn=eval_fn, pop_size=int(pop_size), generations=int(generations),
+            sbx_prob=float(sbx_prob), sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
+        )

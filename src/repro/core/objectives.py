@@ -54,6 +54,33 @@ def make_objective(kind: str, area_constr_mm2: float = 150.0) -> Callable[[EvalR
 
 OBJECTIVES = ("ela", "edp", "e", "l")
 
+# exponents (w_E, w_L, w_A) reproducing each kind as E^wE * L^wL * A^wA
+OBJECTIVE_WEIGHTS: Dict[str, tuple] = {
+    "ela": (1.0, 1.0, 1.0),
+    "edp": (1.0, 1.0, 0.0),
+    "e": (1.0, 0.0, 0.0),
+    "l": (0.0, 1.0, 0.0),
+}
+
+
+def make_weighted_objective(area_constr_mm2: float = 150.0) -> Callable:
+    """Exponent-weighted objective s = max(E)^wE * max(L)^wL * A^wA with a
+    *traced* weight vector, covering every kind in ``OBJECTIVES``.  Lets a
+    vmapped search batch mix objective families inside ONE XLA program
+    (``core.search.batched_search(obj_weights=...)``) instead of retracing
+    the GA once per objective."""
+
+    def score(r: EvalResult, weights: jnp.ndarray) -> jnp.ndarray:
+        e = _joint(r.energy_pj)
+        l = _joint(r.latency_ns)
+        a = r.area_mm2
+        s = e ** weights[0] * l ** weights[1] * a ** weights[2]
+        feasible = r.fits.all(axis=-1) & r.valid & (a <= area_constr_mm2)
+        return jnp.where(feasible, s, INF)
+
+    score.area_constr = area_constr_mm2
+    return score
+
 
 def rescore(r: EvalResult, kind: str, area_constr_mm2: float = 150.0) -> jnp.ndarray:
     """Re-evaluate stored designs under a different objective/workload set."""

@@ -92,7 +92,16 @@ def evaluate_designs(
     d: DesignArrays, ws: WorkloadSet, tech: TechParams = TECH
 ) -> EvalResult:
     """Vectorized evaluation: designs (P,) x workloads (W, L, 6)."""
-    feats, mask = ws.feats, ws.mask  # (W, L, 6), (W, L)
+    return evaluate_designs_arrays(d, ws.feats, ws.mask, tech)
+
+
+def evaluate_designs_arrays(
+    d: DesignArrays, feats: jnp.ndarray, mask: jnp.ndarray, tech: TechParams = TECH
+) -> EvalResult:
+    """Same as ``evaluate_designs`` but on raw (feats (W, L, 6), mask (W, L))
+    tensors, so workload sets can be traced arguments — the batched search
+    path (``core.search.batched_search``) vmaps over a leading batch axis of
+    these and the jit cache is keyed only on shapes, not WorkloadSet objects."""
     M, K, N, A_in, A_out, G = [feats[..., i] for i in range(6)]
     maskf = mask.astype(jnp.float32)
 

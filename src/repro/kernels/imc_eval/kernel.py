@@ -1,13 +1,16 @@
 """Pallas TPU kernel: IMC design-space population evaluation.
 
 The paper's hot loop — evaluate a population of chip designs against a
-workload's layer table — as a VMEM-tiled (designs x layers) grid:
+whole SET of workloads' layer tables — as a VMEM-tiled 3-D grid in ONE
+kernel launch:
 
   * designs live on the LANE axis (tile 128, the VPU vector width),
   * layers live on the SUBLANE axis (tile 8),
-  * grid = (P // 128, L // 8); the layer axis is the innermost
-    ("arbitrary") grid dim so each design-tile's partial sums accumulate
-    in-place in the output block across layer steps,
+  * workloads are a middle grid axis (W is small; each (p, w) cell owns
+    one row of the (W, P) accumulators),
+  * grid = (P // 128, W, L // 8); the layer axis is the innermost
+    ("arbitrary") grid dim so each (design-tile, workload)'s partial sums
+    accumulate in-place in the output block across layer steps,
   * all tech constants are compile-time Python floats (baked into the
     kernel body; nothing but the design/layer tiles touches VMEM).
 
@@ -15,7 +18,7 @@ Layout choices (HW-codesign): every per-(design, layer) term is an
 (8, 128) outer-product-style vector op — sublane-broadcast of the layer
 feature column against the lane vector of design parameters.  This is the
 TPU-native shape of the paper's evaluator: no MXU needed (no matmuls),
-pure 8x128 VPU tiles, one pass over HBM for the layer table.
+pure 8x128 VPU tiles, one pass over HBM for all W layer tables.
 """
 from __future__ import annotations
 
@@ -28,30 +31,31 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.imc.tech import TECH, TechParams
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
 LANE = 128  # designs per tile (lane axis)
 SUB = 8  # layers per tile (sublane axis)
 
 
 def _eval_kernel(
-    feats_ref,  # (6, SUB)   layer features tile (feature-major)
-    mask_ref,  # (1, SUB)
+    feats_ref,  # (1, 6, SUB)   this workload's layer-features tile
+    mask_ref,  # (1, 1, SUB)
     d_ref,  # (9, LANE)  design params tile (param-major)
-    energy_ref,  # (1, LANE)  accumulated outputs
+    energy_ref,  # (1, LANE)  accumulated outputs, one (w, p) row each
     latency_ref,  # (1, LANE)
     demand_ref,  # (1, LANE)
     *,
     tech: TechParams,
 ):
-    li = pl.program_id(1)  # layer-tile index (innermost, sequential)
+    li = pl.program_id(2)  # layer-tile index (innermost, sequential)
 
     d = d_ref[...]  # (9, LANE)
     rows, cols = d[0:1], d[1:2]  # (1, LANE)
     g_chip, v_op, bits = d[4:5], d[5:6], d[6:7]
     t_cyc, glb_mb = d[7:8], d[8:9]
 
-    f = feats_ref[...]  # (6, SUB)
-    mk = mask_ref[...].astype(jnp.float32)  # (1, SUB)
+    f = feats_ref[0]  # (6, SUB)
+    mk = mask_ref[0].astype(jnp.float32)  # (1, SUB)
 
     # (SUB, 1) feature columns x (1, LANE) design rows -> (SUB, LANE) tiles
     def col(i):
@@ -100,16 +104,19 @@ def _eval_kernel(
         demand_ref[...] += demand
 
 
-def imc_eval_pallas(
+def imc_eval_pallas_multi(
     designs: jnp.ndarray,  # (P, 9)
-    feats: jnp.ndarray,  # (L, 6)
-    mask: jnp.ndarray,  # (L,)
+    feats: jnp.ndarray,  # (W, L, 6)
+    mask: jnp.ndarray,  # (W, L)
     *,
     tech: TechParams = TECH,
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Pad, tile and launch.  Returns (energy, latency, demand), each (P,)."""
-    P, L = designs.shape[0], feats.shape[0]
+    """Pad, tile and launch ONCE for the whole workload set.
+
+    Returns (energy, latency, demand), each (W, P)."""
+    P = designs.shape[0]
+    W, L = feats.shape[0], feats.shape[1]
     Pp = -(-P // LANE) * LANE
     Lp = -(-L // SUB) * SUB
 
@@ -119,25 +126,42 @@ def imc_eval_pallas(
     if Pp != P:
         ones = jnp.ones((9, Pp - P), jnp.float32)
         dT = dT.at[:, P:].set(ones)
-    fT = jnp.zeros((6, Lp), jnp.float32).at[:, :L].set(feats.T.astype(jnp.float32))
-    mk = jnp.zeros((1, Lp), jnp.float32).at[0, :L].set(mask.astype(jnp.float32))
+    fT = jnp.zeros((W, 6, Lp), jnp.float32)
+    fT = fT.at[:, :, :L].set(jnp.transpose(feats, (0, 2, 1)).astype(jnp.float32))
+    mk = jnp.zeros((W, 1, Lp), jnp.float32)
+    mk = mk.at[:, 0, :L].set(mask.astype(jnp.float32))
 
-    grid = (Pp // LANE, Lp // SUB)
-    out_shape = [jax.ShapeDtypeStruct((1, Pp), jnp.float32)] * 3
-    out_spec = pl.BlockSpec((1, LANE), lambda p, l: (0, p))
+    grid = (Pp // LANE, W, Lp // SUB)
+    out_shape = [jax.ShapeDtypeStruct((W, Pp), jnp.float32)] * 3
+    out_spec = pl.BlockSpec((1, LANE), lambda p, w, l: (w, p))
     energy, latency, demand = pl.pallas_call(
         functools.partial(_eval_kernel, tech=tech),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((6, SUB), lambda p, l: (0, l)),
-            pl.BlockSpec((1, SUB), lambda p, l: (0, l)),
-            pl.BlockSpec((9, LANE), lambda p, l: (0, p)),
+            pl.BlockSpec((1, 6, SUB), lambda p, w, l: (w, 0, l)),
+            pl.BlockSpec((1, 1, SUB), lambda p, w, l: (w, 0, l)),
+            pl.BlockSpec((9, LANE), lambda p, w, l: (0, p)),
         ],
         out_specs=[out_spec, out_spec, out_spec],
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(fT, mk, dT)
-    return energy[0, :P], latency[0, :P], demand[0, :P]
+    return energy[:, :P], latency[:, :P], demand[:, :P]
+
+
+def imc_eval_pallas(
+    designs: jnp.ndarray,  # (P, 9)
+    feats: jnp.ndarray,  # (L, 6)
+    mask: jnp.ndarray,  # (L,)
+    *,
+    tech: TechParams = TECH,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-workload convenience wrapper.  Returns (P,) each."""
+    e, l, x = imc_eval_pallas_multi(
+        designs, feats[None], mask[None], tech=tech, interpret=interpret
+    )
+    return e[0], l[0], x[0]

@@ -1,11 +1,14 @@
 """Jitted wrapper: full EvalResult via the Pallas imc_eval kernel.
 
-Drop-in for ``repro.imc.cost.evaluate_designs`` — the per-(design, layer)
-sums run in the kernel (one launch per workload; W is small), the design-
-global terms (area, leakage, V/f validity, fits) are tiny jnp epilogues.
+Drop-in for ``repro.imc.cost.evaluate_designs`` — the per-(design, layer,
+workload) sums run in the kernel as ONE ``pallas_call`` over a 3-D
+(P-tiles x W x L-tiles) grid writing (W, P) accumulators; the design-
+global terms (area, leakage, V/f validity, fits) are tiny jnp epilogues
+that fuse into the surrounding jit (e.g. the GA's objective reduction).
 
 ``backend="jnp"`` selects the pure-jnp oracle path (identical math); tests
-assert allclose between the two across shape/dtype sweeps.
+assert allclose between the two across shape/dtype sweeps, and that the
+multi-workload path issues exactly one kernel launch.
 """
 from __future__ import annotations
 
@@ -17,34 +20,32 @@ import jax.numpy as jnp
 from repro.imc.cost import DesignArrays, EvalResult, area_mm2
 from repro.imc.tech import TECH, TechParams
 from repro.kernels.imc_eval import ref as ref_mod
-from repro.kernels.imc_eval.kernel import imc_eval_pallas
+from repro.kernels.imc_eval.kernel import imc_eval_pallas_multi
 from repro.workloads.pack import WorkloadSet
 
 
-def evaluate_designs_kernel(
+def evaluate_designs_kernel_arrays(
     d: DesignArrays,
-    ws: WorkloadSet,
+    feats: jnp.ndarray,  # (W, L, 6)
+    mask: jnp.ndarray,  # (W, L)
     tech: TechParams = TECH,
     *,
     backend: Literal["pallas", "jnp"] = "pallas",
     interpret: bool = True,
 ) -> EvalResult:
     designs = jnp.stack(list(d), axis=1).astype(jnp.float32)  # (P, 9)
-    P, W = designs.shape[0], ws.n
 
-    energies, latencies, demands = [], [], []
-    for w in range(W):
-        feats, mask = ws.feats[w], ws.mask[w]
-        if backend == "pallas":
-            e, l, x = imc_eval_pallas(designs, feats, mask, tech=tech, interpret=interpret)
-        else:
-            e, l, x = ref_mod.eval_one_workload(designs, feats, mask, tech)
-        energies.append(e)
-        latencies.append(l)
-        demands.append(x)
-    energy = jnp.stack(energies, axis=1)  # (P, W)
-    latency = jnp.stack(latencies, axis=1)
-    demand = jnp.stack(demands, axis=1)
+    if backend == "pallas":
+        e, l, x = imc_eval_pallas_multi(
+            designs, feats, mask, tech=tech, interpret=interpret
+        )  # (W, P) each, one launch
+    else:
+        e, l, x = jax.vmap(
+            lambda f, m: ref_mod.eval_one_workload(designs, f, m, tech)
+        )(feats, mask)
+    energy = e.T  # (P, W)
+    latency = l.T
+    demand = x.T
 
     area = area_mm2(d, tech)  # (P,)
     energy = energy + tech.leak_mw_per_mm2 * area[:, None] * latency
@@ -64,4 +65,17 @@ def evaluate_designs_kernel(
         fits=fits,
         valid=valid,
         util=util,
+    )
+
+
+def evaluate_designs_kernel(
+    d: DesignArrays,
+    ws: WorkloadSet,
+    tech: TechParams = TECH,
+    *,
+    backend: Literal["pallas", "jnp"] = "pallas",
+    interpret: bool = True,
+) -> EvalResult:
+    return evaluate_designs_kernel_arrays(
+        d, ws.feats, ws.mask, tech, backend=backend, interpret=interpret
     )

@@ -133,13 +133,14 @@ def test_ssd_decode_consistent_with_scan():
 
 # ------------------------------------------------------------------ imc_eval
 def test_imc_eval_padding_edges():
-    """Odd population / layer counts exercise the pad+mask path."""
+    """Odd population / layer counts exercise the pad+mask path — P not a
+    multiple of the 128 lane tile, L not a multiple of the 8 sublane tile."""
     from repro.core import space
     from repro.kernels.imc_eval import ref
     from repro.kernels.imc_eval.kernel import imc_eval_pallas
 
     key = jax.random.PRNGKey(0)
-    for P, L in [(1, 1), (7, 3), (129, 9), (130, 65)]:
+    for P, L in [(1, 1), (7, 3), (129, 9), (130, 65), (300, 13)]:
         g = space.random_genomes(key, P)
         d = jnp.stack(list(space.decode(g)), axis=1)
         feats = jnp.abs(jax.random.normal(key, (L, 6))) * 100 + 1
@@ -149,3 +150,55 @@ def test_imc_eval_padding_edges():
         np.testing.assert_allclose(e_p, e_r, rtol=2e-5)
         np.testing.assert_allclose(l_p, l_r, rtol=2e-5)
         np.testing.assert_allclose(x_p, x_r, rtol=2e-5)
+
+
+def test_imc_eval_multi_workload_padding_edges():
+    """3-D-grid kernel vs per-workload oracle, with ragged layer masks and
+    non-aligned P / L."""
+    from repro.core import space
+    from repro.kernels.imc_eval import ref
+    from repro.kernels.imc_eval.kernel import imc_eval_pallas_multi
+
+    key = jax.random.PRNGKey(1)
+    P, W, L = 70, 3, 13
+    g = space.random_genomes(key, P)
+    d = jnp.stack(list(space.decode(g)), axis=1)
+    feats = jnp.abs(jax.random.normal(key, (W, L, 6))) * 100 + 1
+    n_layers = [13, 5, 8]  # ragged
+    mask = jnp.stack([jnp.arange(L) < n for n in n_layers])
+    e_p, l_p, x_p = imc_eval_pallas_multi(d, feats, mask)
+    assert e_p.shape == (W, P)
+    for w in range(W):
+        e_r, l_r, x_r = ref.eval_one_workload(d, feats[w], mask[w])
+        np.testing.assert_allclose(e_p[w], e_r, rtol=2e-5)
+        np.testing.assert_allclose(l_p[w], l_r, rtol=2e-5)
+        np.testing.assert_allclose(x_p[w], x_r, rtol=2e-5)
+
+
+def test_imc_eval_multi_workload_single_launch(monkeypatch):
+    """A multi-workload evaluation must issue exactly ONE pallas_call and
+    stay allclose (rtol 1e-5) to the pure-jnp cost model."""
+    from repro.core import space
+    from repro.imc.cost import evaluate_designs
+    from repro.kernels.imc_eval import kernel as kmod
+    from repro.kernels.imc_eval.ops import evaluate_designs_kernel
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    calls = []
+    real = kmod.pl.pallas_call
+
+    def counting(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(kmod.pl, "pallas_call", counting)
+    ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    d = space.decode(space.random_genomes(jax.random.PRNGKey(0), 130))
+    r = evaluate_designs_kernel(d, ws, backend="pallas")
+    ref = evaluate_designs(d, ws)
+    assert len(calls) == 1
+    np.testing.assert_allclose(r.energy_pj, ref.energy_pj, rtol=1e-5)
+    np.testing.assert_allclose(r.latency_ns, ref.latency_ns, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(r.fits), np.asarray(ref.fits))
+    np.testing.assert_array_equal(np.asarray(r.valid), np.asarray(ref.valid))

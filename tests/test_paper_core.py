@@ -1,13 +1,15 @@
-"""Paper core: search space, GA operators, objectives, joint/separate."""
+"""Paper core: search space, GA operators, objectives, joint/separate.
+
+(Property-based variants live in test_properties.py, guarded on
+hypothesis being installed; batched-vs-sequential parity in
+test_search_batched.py.)"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import space
-from repro.core.ga import _poly_mutation, _sbx, _tournament, run_ga
+from repro.core.ga import _tournament, run_ga
 from repro.core.objectives import OBJECTIVES, make_objective
 from repro.core.search import (
     joint_search,
@@ -41,44 +43,7 @@ def test_decode_hits_every_grid_value():
         np.testing.assert_allclose(vals, space.SPACE[f], rtol=1e-6)
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=10, deadline=None)
-def test_genome_roundtrip(seed):
-    g = space.random_genomes(jax.random.PRNGKey(seed), 16)
-    idx = space.decode_indices(g)
-    g2 = space.genome_from_indices(np.asarray(idx))
-    idx2 = space.decode_indices(jnp.asarray(g2, jnp.float32))
-    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx2))
-
-
 # ---------------------------------------------------------------- GA operators
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=10, deadline=None)
-def test_sbx_bounds_and_mean(seed):
-    key = jax.random.PRNGKey(seed)
-    k1, k2, k3 = jax.random.split(key, 3)
-    p1 = jax.random.uniform(k1, (64, space.N_GENES))
-    p2 = jax.random.uniform(k2, (64, space.N_GENES))
-    c1, c2 = _sbx(k3, p1, p2, eta=3.0, prob=0.95)
-    assert float(c1.min()) >= 0.0 and float(c1.max()) < 1.0
-    assert float(c2.min()) >= 0.0 and float(c2.max()) < 1.0
-    # SBX preserves the parent-pair mean wherever the [0,1) clip didn't bind
-    c1n, c2n = np.asarray(c1), np.asarray(c2)
-    interior = (c1n > 1e-6) & (c1n < 1 - 1e-6) & (c2n > 1e-6) & (c2n < 1 - 1e-6)
-    np.testing.assert_allclose(
-        (c1n + c2n)[interior], np.asarray(p1 + p2)[interior], atol=1e-4
-    )
-
-
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=10, deadline=None)
-def test_poly_mutation_in_bounds(seed):
-    key = jax.random.PRNGKey(seed)
-    x = jax.random.uniform(key, (64, space.N_GENES))
-    y = _poly_mutation(key, x, eta=3.0, prob=1.0)
-    assert float(y.min()) >= 0.0 and float(y.max()) < 1.0
-
-
 def test_tournament_prefers_better():
     scores = jnp.asarray([0.0, 1.0, 2.0, 3.0])
     winners = _tournament(jax.random.PRNGKey(0), scores, 256)

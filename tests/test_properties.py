@@ -1,0 +1,79 @@
+"""Property-based tests (hypothesis).
+
+Kept in their own module so ``pytest.importorskip`` can skip them cleanly
+when hypothesis isn't installed, while the deterministic parity tests in
+test_imc_cost.py / test_paper_core.py always run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import space
+from repro.core.ga import _poly_mutation, _sbx
+from repro.imc.cost import DesignArrays, evaluate_designs
+from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+from repro.workloads.pack import pack_workloads
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+
+
+def _design(**kw):
+    base = dict(rows=128.0, cols=128.0, c_per_tile=8.0, t_per_router=8.0,
+                g_per_chip=8.0, v_op=0.9, bits_cell=2.0, t_cycle_ns=2.0,
+                glb_mb=1.0)
+    base.update(kw)
+    return DesignArrays(**{k: jnp.asarray([v], jnp.float32) for k, v in base.items()})
+
+
+@given(st.sampled_from([32.0, 64.0, 128.0, 256.0, 512.0]))
+@settings(max_examples=5, deadline=None)
+def test_more_capacity_never_hurts_fit(ws, rows):
+    small = evaluate_designs(_design(rows=rows, c_per_tile=2.0), ws)
+    big = evaluate_designs(_design(rows=rows, c_per_tile=32.0), ws)
+    # strictly more crossbars on chip -> fits is monotone
+    assert bool((big.fits | ~small.fits).all())
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_genome_roundtrip(seed):
+    g = space.random_genomes(jax.random.PRNGKey(seed), 16)
+    idx = space.decode_indices(g)
+    g2 = space.genome_from_indices(np.asarray(idx))
+    idx2 = space.decode_indices(jnp.asarray(g2, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx2))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_sbx_bounds_and_mean(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p1 = jax.random.uniform(k1, (64, space.N_GENES))
+    p2 = jax.random.uniform(k2, (64, space.N_GENES))
+    c1, c2 = _sbx(k3, p1, p2, eta=3.0, prob=0.95)
+    assert float(c1.min()) >= 0.0 and float(c1.max()) < 1.0
+    assert float(c2.min()) >= 0.0 and float(c2.max()) < 1.0
+    # SBX preserves the parent-pair mean wherever the [0,1) clip didn't bind
+    c1n, c2n = np.asarray(c1), np.asarray(c2)
+    interior = (c1n > 1e-6) & (c1n < 1 - 1e-6) & (c2n > 1e-6) & (c2n < 1 - 1e-6)
+    np.testing.assert_allclose(
+        (c1n + c2n)[interior], np.asarray(p1 + p2)[interior], atol=1e-4
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_poly_mutation_in_bounds(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (64, space.N_GENES))
+    y = _poly_mutation(key, x, eta=3.0, prob=1.0)
+    assert float(y.min()) >= 0.0 and float(y.max()) < 1.0

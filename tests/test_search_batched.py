@@ -1,0 +1,124 @@
+"""Batched (one-jit, vmapped) search stack == sequential reference paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import space
+from repro.core import ga as ga_mod
+from repro.core.objectives import OBJECTIVES, OBJECTIVE_WEIGHTS, make_objective, \
+    make_weighted_objective
+from repro.core.search import (
+    batched_search,
+    joint_search,
+    joint_search_batched,
+    run_search,
+    seed_population,
+    seed_population_batched,
+    separate_search,
+)
+from repro.imc.cost import evaluate_designs
+from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+from repro.workloads.pack import pack_workloads
+
+POP, GENS = 16, 4
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+
+
+def test_separate_batched_matches_sequential(ws):
+    sb = separate_search(jax.random.PRNGKey(0), ws, pop_size=POP,
+                         generations=GENS, batched=True)
+    ss = separate_search(jax.random.PRNGKey(0), ws, pop_size=POP,
+                         generations=GENS, batched=False)
+    for name in ws.names:
+        np.testing.assert_allclose(
+            np.asarray(sb[name].ga.scores), np.asarray(ss[name].ga.scores),
+            rtol=1e-6,
+        )
+        np.testing.assert_allclose(
+            sb[name].top_scores, ss[name].top_scores, rtol=1e-6
+        )
+
+
+def test_multi_seed_batched_matches_sequential(ws):
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in range(3)])
+    batch = joint_search_batched(keys, ws, pop_size=POP, generations=GENS)
+    for s in range(3):
+        seq = joint_search(jax.random.PRNGKey(s), ws, pop_size=POP,
+                           generations=GENS)
+        np.testing.assert_allclose(
+            np.asarray(batch[s].ga.scores), np.asarray(seq.ga.scores), rtol=1e-6
+        )
+
+
+def test_seed_population_batched_matches(ws):
+    keys = jnp.stack([jax.random.PRNGKey(5), jax.random.PRNGKey(6)])
+    B = 2
+    feats = jnp.broadcast_to(ws.feats[None], (B,) + ws.feats.shape)
+    mask = jnp.broadcast_to(ws.mask[None], (B,) + ws.mask.shape)
+    pools = seed_population_batched(keys, feats, mask, 8)
+    for b in range(B):
+        seq = seed_population(keys[b], ws, 8)
+        np.testing.assert_array_equal(np.asarray(pools[b]), np.asarray(seq))
+
+
+def test_share_init_not_consumed(ws):
+    """run_ga donates its init buffer, but driver APIs must never consume
+    caller-owned arrays (the lm_hw_cosearch example reuses one init)."""
+    init = seed_population(jax.random.PRNGKey(0), ws, POP)
+    joint_search(jax.random.PRNGKey(1), ws, pop_size=POP, generations=2,
+                 init_genomes=init)
+    sep = separate_search(jax.random.PRNGKey(2), ws, pop_size=POP,
+                          generations=2, share_init=init)
+    assert len(sep) == ws.n
+    assert np.asarray(init).shape == (POP, space.N_GENES)  # still readable
+
+
+def test_ga_odd_population(ws):
+    """Odd P used to silently drop a tournament parent; now one extra pair
+    is drawn and the children truncated, keeping history shapes (G+1, P)."""
+    res = joint_search(jax.random.PRNGKey(0), ws, pop_size=15, generations=3)
+    assert res.ga.genomes.shape == (4, 15, space.N_GENES)
+    assert res.ga.scores.shape == (4, 15)
+    conv = res.convergence
+    assert (np.diff(conv[np.isfinite(conv)]) <= 1e-6).all()
+
+
+def test_ga_jit_cached_across_seeds(ws):
+    """Different seeds / same shapes must NOT retrace the GA program."""
+    run_search(jax.random.PRNGKey(0), ws, pop_size=8, generations=2)
+    n1 = ga_mod._run_ga_jit._cache_size()
+    run_search(jax.random.PRNGKey(1), ws, pop_size=8, generations=2)
+    assert ga_mod._run_ga_jit._cache_size() == n1
+
+
+def test_weighted_objective_matches_kinds(ws):
+    g = space.random_genomes(jax.random.PRNGKey(0), 64)
+    r = evaluate_designs(space.decode(g), ws)
+    w_obj = make_weighted_objective(150.0)
+    for kind in OBJECTIVES:
+        s_ref = np.asarray(make_objective(kind, 150.0)(r))
+        s_w = np.asarray(w_obj(r, jnp.asarray(OBJECTIVE_WEIGHTS[kind])))
+        np.testing.assert_allclose(s_w, s_ref, rtol=1e-6)
+
+
+def test_batched_obj_weights_matches_plain(ws):
+    """obj_weights path == the string-objective path for 'ela'."""
+    keys = jnp.stack([jax.random.PRNGKey(3), jax.random.PRNGKey(4)])
+    B = 2
+    feats = jnp.broadcast_to(ws.feats[None], (B,) + ws.feats.shape)
+    mask = jnp.broadcast_to(ws.mask[None], (B,) + ws.mask.shape)
+    plain = batched_search(keys, feats, mask, pop_size=POP, generations=GENS)
+    weighted = batched_search(
+        keys, feats, mask, pop_size=POP, generations=GENS,
+        obj_weights=jnp.tile(jnp.asarray(OBJECTIVE_WEIGHTS["ela"])[None], (B, 1)),
+    )
+    for b in range(B):
+        np.testing.assert_allclose(
+            np.asarray(weighted[b].ga.scores), np.asarray(plain[b].ga.scores),
+            rtol=1e-5,
+        )

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 gate + benchmark smoke, as run by .github/workflows/ci.yml:
+#   bash tools/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python -m benchmarks.run --quick
