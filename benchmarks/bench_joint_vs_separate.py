@@ -11,23 +11,23 @@ All S joint searches run as ONE vmapped XLA program
 (``joint_search_batched``), and all S x W separate searches as another
 (``batched_search``) — two launches for the whole figure instead of
 S * (1 + W) sequentially retraced GAs (~10x end-to-end on this container).
+
+``--mesh [SEARCHxPOP]`` lays both programs out over a 2-D (search,
+population) device mesh (fake 8-device host on CPU) — same scores, the
+whole figure sharded over the fleet.
 """
 from __future__ import annotations
 
 import json
+import sys
 import time
 from typing import Dict
 
+# repro modules build device arrays at import; keep them lazy so main()
+# can inject xla_force_host_platform_device_count first (see --mesh).
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from repro.core.objectives import OBJECTIVE_WEIGHTS
-from repro.core.search import batched_search, joint_search_batched
-from repro.imc.cost import evaluate_designs
-from repro.core import space
-from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
-from repro.workloads.pack import pack_workloads
 
 POP, GENS, TOPK = 40, 10, 10
 AREA = 150.0
@@ -37,6 +37,10 @@ def per_workload_scores(
     genome: np.ndarray, ws, area=AREA, objective: str = "ela"
 ) -> Dict[str, float]:
     """Score of ONE design on each single workload (one evaluation)."""
+    from repro.core import space
+    from repro.core.objectives import OBJECTIVE_WEIGHTS
+    from repro.imc.cost import evaluate_designs
+
     d = space.decode(jnp.asarray(genome[None, :]))
     r = evaluate_designs(d, ws)
     e = np.asarray(r.energy_pj[0])  # per-workload columns are independent,
@@ -51,16 +55,24 @@ def per_workload_scores(
     return out
 
 
-def run(seeds: int = 5, verbose: bool = True) -> dict:
+def run(seeds: int = 5, verbose: bool = True, mesh=None) -> dict:
+    from repro.core.search import batched_search, joint_search_batched
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
     ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
     W = ws.n
     largest = "vgg16"
     results = {"seeds": [], "pop": POP, "gens": GENS}
+    if mesh is not None:
+        from repro.launch.mesh import describe
+
+        results["mesh"] = describe(mesh)
 
     t0 = time.time()
     joint_keys = jnp.stack([jax.random.PRNGKey(s) for s in range(seeds)])
     joints = joint_search_batched(
-        joint_keys, ws, pop_size=POP, generations=GENS, top_k=TOPK
+        joint_keys, ws, pop_size=POP, generations=GENS, top_k=TOPK, mesh=mesh
     )
     t_joint = time.time() - t0
 
@@ -77,6 +89,7 @@ def run(seeds: int = 5, verbose: bool = True) -> dict:
         pop_size=POP,
         generations=GENS,
         top_k=TOPK,
+        mesh=mesh,
     )
     t_sep = time.time() - t0
     results["joint_wall_s_total"] = t_joint
@@ -136,9 +149,26 @@ def run(seeds: int = 5, verbose: bool = True) -> dict:
     return results
 
 
-if __name__ == "__main__":
-    from benchmarks.run import exp_dir
+def main(argv=None) -> int:
+    import argparse
 
-    out = run()
+    from benchmarks.run import exp_dir, prepare_search_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=5)
+    ap.add_argument(
+        "--mesh", nargs="?", const="auto", default=None, metavar="SEARCHxPOP",
+        help="shard both figure programs over a (search, population) mesh",
+    )
+    args = ap.parse_args(argv)
+
+    mesh = prepare_search_mesh(args.mesh) if args.mesh else None
+    out = run(seeds=args.seeds, mesh=mesh)
+
     with open(exp_dir() / "fig2_joint_vs_separate.json", "w") as f:
         json.dump(out, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

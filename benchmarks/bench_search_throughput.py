@@ -11,18 +11,23 @@ paper's operating point (P=40, G=10, 4-CNN workload set):
 ``benchmarks/run.py`` writes the result to
 ``experiments/search_throughput.json`` so future PRs can diff the
 trajectory.  The paper's 4 h for the same P x G search is the 1x line.
+
+``--mesh [SEARCHxPOP]`` re-runs the same workload on a 2-D (search,
+population) device mesh (``launch.mesh.make_search_mesh``) and records the
+sharded row under the ``"sharded"`` key of the same json — on a CPU host
+it forces 8 fake XLA devices first, so the row proves the fleet layout
+end-to-end even without real hardware.  See benchmarks/README.md.
 """
 from __future__ import annotations
 
-import json
+import sys
 import time
 
+# NOTE: importing jax alone does not initialize the XLA backend, but the
+# repro modules build device arrays at import — keep them inside run() so
+# ``main()`` can still inject xla_force_host_platform_device_count first.
 import jax
 import jax.numpy as jnp
-
-from repro.core.search import batched_search, joint_search_batched
-from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
-from repro.workloads.pack import pack_workloads
 
 PAPER_S_PER_DESIGN = 36.0
 POP, GENS = 40, 10
@@ -32,23 +37,36 @@ def _block(results) -> None:
     jax.block_until_ready([r.ga.scores for r in results])
 
 
-def run(quick: bool = False, verbose: bool = True) -> dict:
+def run(quick: bool = False, verbose: bool = True, mesh=None) -> dict:
+    from repro.core.search import batched_search, joint_search_batched
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
     ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
-    seeds = 2 if quick else 5
+    # sharded rows use a seed count divisible by every 8-device search-axis
+    # layout so the batch axis actually shards (ragged dims replicate)
+    seeds = (4 if quick else 8) if mesh is not None else (2 if quick else 5)
     per_search = POP * (GENS + 1)
     out = {
         "pop": POP, "gens": GENS, "seeds": seeds,
         "paper_s_per_design": PAPER_S_PER_DESIGN,
     }
+    if mesh is not None:
+        from repro.launch.mesh import describe
+
+        out["mesh"] = describe(mesh)
+        out["devices"] = int(jax.device_count())
 
     def keys(base):
         return jnp.stack([jax.random.PRNGKey(base + s) for s in range(seeds)])
 
     t0 = time.time()
-    _block(joint_search_batched(keys(0), ws, pop_size=POP, generations=GENS))
+    _block(joint_search_batched(keys(0), ws, pop_size=POP, generations=GENS,
+                                mesh=mesh))
     cold = time.time() - t0
     t0 = time.time()
-    _block(joint_search_batched(keys(1000), ws, pop_size=POP, generations=GENS))
+    _block(joint_search_batched(keys(1000), ws, pop_size=POP, generations=GENS,
+                                mesh=mesh))
     warm = time.time() - t0
     n = seeds * per_search
     out["joint"] = {
@@ -73,11 +91,11 @@ def run(quick: bool = False, verbose: bool = True) -> dict:
 
     t0 = time.time()
     _block(batched_search(sep_keys(0), sep_feats, sep_mask,
-                          pop_size=POP, generations=GENS))
+                          pop_size=POP, generations=GENS, mesh=mesh))
     cold = time.time() - t0
     t0 = time.time()
     _block(batched_search(sep_keys(1000), sep_feats, sep_mask,
-                          pop_size=POP, generations=GENS))
+                          pop_size=POP, generations=GENS, mesh=mesh))
     warm = time.time() - t0
     n = seeds * W * per_search
     out["separate"] = {
@@ -93,9 +111,25 @@ def run(quick: bool = False, verbose: bool = True) -> dict:
     return out
 
 
-if __name__ == "__main__":
-    from benchmarks.run import exp_dir
+def main(argv=None) -> int:
+    import argparse
 
-    res = run()
-    with open(exp_dir() / "search_throughput.json", "w") as f:
-        json.dump(res, f, indent=1)
+    from benchmarks.run import prepare_search_mesh, write_search_throughput
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer seeds")
+    ap.add_argument(
+        "--mesh", nargs="?", const="auto", default=None, metavar="SEARCHxPOP",
+        help="shard over a (search, population) mesh (e.g. 2x4; default: all "
+             "devices on search) and record the row under 'sharded'",
+    )
+    args = ap.parse_args(argv)
+
+    mesh = prepare_search_mesh(args.mesh) if args.mesh else None
+    res = run(quick=args.quick, mesh=mesh)
+    write_search_throughput(res, sharded=mesh is not None)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,46 @@ def exp_dir() -> Path:
     return EXP
 
 
+def prepare_search_mesh(spec: str):
+    """``--mesh`` argument (``'auto'`` or ``'SEARCHxPOP'``) -> 2-D search
+    mesh, shared by the bench entry points.  CPU-only hosts expose one
+    device, so this first fakes 8 XLA host devices — it must therefore run
+    before anything initializes a jax backend (the benches keep their
+    repro imports lazy for exactly this reason)."""
+    import os
+
+    if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8"
+        ).strip()
+    from repro.launch.mesh import make_search_mesh
+
+    if spec == "auto":
+        return make_search_mesh()
+    s, p = (int(v) for v in spec.lower().split("x"))
+    return make_search_mesh(s, p)
+
+
+def write_search_throughput(res: dict, *, sharded: bool = False) -> Path:
+    """Write ``experiments/search_throughput.json``, keeping the unsharded
+    trajectory rows and the ``'sharded'`` row consistent no matter which
+    entry point (benchmarks.run or bench_search_throughput --mesh) wrote
+    last."""
+    path = exp_dir() / "search_throughput.json"
+    prior = json.loads(path.read_text()) if path.exists() else {}
+    if sharded:
+        out = prior
+        out["sharded"] = res
+    else:
+        out = res
+        if "sharded" in prior:
+            out["sharded"] = prior["sharded"]
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return path
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="1 seed instead of 5")
@@ -51,8 +91,7 @@ def main(argv=None) -> int:
 
     print("\n== search throughput (batched one-jit stack; tracked trajectory) ==")
     sthru = bench_search_throughput.run(quick=args.quick)
-    with open(EXP / "search_throughput.json", "w") as f:
-        json.dump(sthru, f, indent=1)
+    write_search_throughput(sthru)
 
     print("\n== Fig. 2: joint vs separate ==")
     fig2 = bench_joint_vs_separate.run(seeds=1 if args.quick else 5)

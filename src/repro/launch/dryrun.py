@@ -16,6 +16,9 @@ Usage:
     python -m repro.launch.dryrun --arch yi-9b --shape train_4k
     python -m repro.launch.dryrun --all [--mesh single|multi|both]
     python -m repro.launch.dryrun --paper          # DSE generation dry-run
+    python -m repro.launch.dryrun --paper --search-mesh 64x8
+                       # fleet DSE dry-run: 64 searches x 8-way population
+                       # sharding on a 2-D (search, data) mesh
 """
 
 import argparse
@@ -38,7 +41,7 @@ from repro.configs.base import SHAPES_BY_NAME, get_config, list_configs
 from repro.distributed import ctx as dist_ctx
 from repro.distributed.sharding import make_rules
 from repro.launch.cells import Cell, all_cells, build_step, skipped_cells
-from repro.launch.mesh import describe, make_production_mesh
+from repro.launch.mesh import describe, make_production_mesh, make_search_mesh
 
 RESULT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
@@ -286,11 +289,62 @@ def dryrun_paper_search(mesh, *, pop_size: int = 4096, save: bool = True) -> Dic
     return rec
 
 
+def dryrun_paper_search_batched(
+    mesh, *, searches: Optional[int] = None, pop_size: int = 1024,
+    save: bool = True,
+) -> Dict[str, Any]:
+    """Dry-run the FLEET DSE eval: B independent searches' populations,
+    batch axis on the ``search`` mesh axis, population axis on ``data``
+    (``core.distributed.sharded_batched_eval_fn``) — the pod-fleet layout
+    behind ``batched_search(..., mesh=...)``."""
+    import jax.numpy as jnp
+
+    from repro.core import space
+    from repro.core.distributed import sharded_batched_eval_fn
+    from repro.launch.mesh import mesh_axis_sizes
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    B = searches or mesh_axis_sizes(mesh).get("search", 1)
+    eval_fn = sharded_batched_eval_fn(mesh, "ela", 150.0)
+    genomes = jax.ShapeDtypeStruct((B, pop_size, space.N_GENES), jnp.float32)
+    ctx = (
+        jax.ShapeDtypeStruct((B,) + ws.feats.shape, ws.feats.dtype),
+        jax.ShapeDtypeStruct((B,) + ws.mask.shape, ws.mask.dtype),
+    )
+    compiled = eval_fn.lower(genomes, ctx).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
+    coll = hlo_lib.collective_stats(compiled.as_text())
+    rec = {
+        "cell": f"paper-dse-fleet/b{B}xpop{pop_size}",
+        "mesh": describe(mesh),
+        "ok": True,
+        "searches": B,
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll.total_bytes,
+    }
+    if save:
+        out = RESULT_DIR / describe(mesh)
+        out.mkdir(parents=True, exist_ok=True)
+        with open(out / f"paper-dse-fleet__b{B}xpop{pop_size}.json", "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="one arch id (default: all)")
     ap.add_argument("--shape", default=None, help="one shape name (default: all)")
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument(
+        "--search-mesh", default=None, metavar="SxP",
+        help="(search, population) mesh, e.g. 64x8: dry-run the fleet DSE "
+             "layout instead of the production meshes (implies --paper)",
+    )
     ap.add_argument("--all", action="store_true", help="run every cell")
     ap.add_argument("--paper", action="store_true", help="dry-run the DSE eval")
     ap.add_argument("--no-save", action="store_true")
@@ -299,6 +353,16 @@ def main(argv=None) -> int:
         help="skip unrolled cost extrapolation (multi-pod compile-proof pass)",
     )
     args = ap.parse_args(argv)
+
+    if args.search_mesh:
+        s, p = (int(v) for v in args.search_mesh.lower().split("x"))
+        mesh = make_search_mesh(s, p)
+        rec = dryrun_paper_search_batched(mesh, save=not args.no_save)
+        print(f"[paper-dse-fleet {describe(mesh)}] ok "
+              f"searches={rec['searches']} "
+              f"flops/dev={rec['flops_per_device']:.3e} "
+              f"coll={rec['collective_bytes']/1e6:.0f}MB")
+        return 0
 
     meshes = []
     if args.mesh in ("single", "both"):

@@ -9,6 +9,12 @@ architectures exported as IMC workloads):
 
     python -m repro.launch.search --lm-workloads llama3.2-1b,mixtral-8x7b \
         --mode decode
+
+``--search-mesh SxP`` lays the batched programs out over a 2-D
+(search, population) device mesh (on CPU-only hosts export
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first; real
+multi-chip hosts need nothing).  Scores are unchanged — it only scales
+how many searches run in parallel.
 """
 from __future__ import annotations
 
@@ -61,8 +67,21 @@ def main(argv=None) -> int:
     ap.add_argument("--gens", type=int, default=10)
     ap.add_argument("--seeds", type=int, default=1)
     ap.add_argument("--separate", action="store_true", help="also run per-workload baselines")
+    ap.add_argument(
+        "--search-mesh", default=None, metavar="SxP",
+        help="(search, population) mesh, e.g. 8x1 — shard the batched "
+             "programs over the visible devices",
+    )
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.search_mesh:
+        from repro.launch.mesh import describe, make_search_mesh
+
+        s, p = (int(v) for v in args.search_mesh.lower().split("x"))
+        mesh = make_search_mesh(s, p)
+        print(f"[search] mesh: {describe(mesh)} ({jax.device_count()} devices)")
 
     ws = build_workloads(args)
     print(f"[search] workloads: {ws.names} (L_max={ws.feats.shape[1]})")
@@ -76,6 +95,7 @@ def main(argv=None) -> int:
         keys, ws,
         objective=args.objective, area_constr=args.area,
         pop_size=args.pop, generations=args.gens,
+        mesh=mesh,
     )
     dt_all = time.time() - t0
     n_evald = args.seeds * args.pop * (args.gens + 1)
@@ -103,6 +123,7 @@ def main(argv=None) -> int:
                 key2, ws,
                 objective=args.objective, area_constr=args.area,
                 pop_size=args.pop, generations=args.gens,
+                mesh=mesh,
             )
             cross = {}
             for name, r in sep.items():

@@ -78,7 +78,7 @@ def test_indivisible_dims_fall_back_replicated():
 # ------------------------------------------------------------- input sharding
 def test_input_sharding_batch_divisibility():
     mesh_like = Mesh(
-        np.asarray(jax.devices() * 1).reshape(1, 1), ("data", "model")
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model")
     )
     cfg = get_config("llama3.2-1b")
     sh = input_sharding(cfg, SHAPES_BY_NAME["train_4k"], mesh_like)
@@ -86,7 +86,7 @@ def test_input_sharding_batch_divisibility():
 
 
 def test_cache_spec_structure_matches_template():
-    mesh_like = Mesh(np.asarray(jax.devices()).reshape(1, 1), ("data", "model"))
+    mesh_like = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     for arch in ("llama3.2-1b", "jamba-v0.1-52b", "whisper-medium"):
         cfg = get_config(arch)
         shape = SHAPES_BY_NAME["decode_32k"]
@@ -103,7 +103,7 @@ def test_constrain_noop_without_context():
 
 
 def test_constrain_applies_on_mesh():
-    mesh = Mesh(np.asarray(jax.devices()).reshape(1, 1), ("data", "model"))
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     rules = make_rules(mesh)
     with dist_ctx.use_rules(mesh, rules):
         x = jnp.ones((4, 8))
@@ -187,7 +187,7 @@ def test_checkpoint_resharded_restore(tmp_path):
     from repro import checkpoint as ck
     from jax.sharding import NamedSharding
 
-    mesh = Mesh(np.asarray(jax.devices()).reshape(1, 1), ("data", "model"))
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     tree = {"w": jnp.arange(8.0).reshape(2, 4)}
     ck.save(tmp_path, 3, tree)
     sh = {"w": NamedSharding(mesh, P(None, None))}

@@ -14,8 +14,15 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import space
+from repro.core.distributed import batch_axes, batch_spec, shape_spec
 from repro.core.ga import _poly_mutation, _sbx
 from repro.imc.cost import DesignArrays, evaluate_designs
+from repro.launch.mesh import (
+    make_mesh,
+    make_search_mesh,
+    make_test_mesh,
+    mesh_axis_sizes,
+)
 from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
 from repro.workloads.pack import pack_workloads
 
@@ -77,3 +84,90 @@ def test_poly_mutation_in_bounds(seed):
     x = jax.random.uniform(key, (64, space.N_GENES))
     y = _poly_mutation(key, x, eta=3.0, prob=1.0)
     assert float(y.min()) >= 0.0 and float(y.max()) < 1.0
+
+
+# -------------------------------------------------- sharding-helper properties
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_genome_roundtrip_any_population_and_batch_shape(b, p, seed):
+    """decode∘encode is the identity on grid indices for every (B, P)
+    factorization of the population pool — the invariant the vmapped and
+    sharded GA paths rely on."""
+    g = space.random_genomes(jax.random.PRNGKey(seed), b * p)
+    idx_flat = np.asarray(space.decode_indices(g))
+    # batched view decodes identically to the flat view
+    idx_b = jax.vmap(space.decode_indices)(g.reshape(b, p, space.N_GENES))
+    np.testing.assert_array_equal(
+        np.asarray(idx_b).reshape(b * p, space.N_GENES), idx_flat
+    )
+    # encode -> decode round-trips exactly
+    g2 = space.genome_from_indices(idx_flat)
+    idx2 = np.asarray(space.decode_indices(jnp.asarray(g2, jnp.float32)))
+    np.testing.assert_array_equal(idx2, idx_flat)
+
+
+def _check_mesh_layout(mesh):
+    """Invariants every mesh layout the repo constructs must satisfy."""
+    sizes = mesh_axis_sizes(mesh)
+    assert tuple(sizes) == tuple(mesh.axis_names)
+    assert all(v >= 1 for v in sizes.values())
+    assert int(np.prod(list(sizes.values()))) == int(mesh.devices.size)
+    assert int(mesh.devices.size) <= jax.device_count()
+    s_ax, p_ax = batch_axes(mesh)
+    assert set(s_ax).isdisjoint(set(p_ax))
+    assert set(s_ax) | set(p_ax) <= set(mesh.axis_names)
+    assert all(a == "search" for a in s_ax)
+    assert all(a in ("pod", "data") for a in p_ax)
+    # specs: dim 0 is the search group, pop_dim the pop group, rest None
+    spec = batch_spec(mesh, 3, pop_dim=1)
+    assert len(spec) == 3 and spec[2] is None
+    assert spec[0] in (s_ax or None, None) and spec[1] in (p_ax or None, None)
+    # shape_spec only ever shards a dim its axis-group size divides
+    shape = (7, 11, 9)
+    for dim, part in enumerate(shape_spec(mesh, shape, pop_dim=1)):
+        if part is not None:
+            group = int(np.prod([sizes[a] for a in part]))
+            assert shape[dim] % group == 0
+
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_test_mesh_layout_invariants(search, data, model):
+    mesh = make_test_mesh(data=data, model=model, search=search)
+    _check_mesh_layout(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    # clamped sizes never exceed the request
+    assert sizes.get("search", 1) <= max(search, 1)
+    assert sizes["data"] <= data and sizes["model"] <= model
+
+
+@given(
+    st.one_of(st.none(), st.integers(1, 16)),
+    st.one_of(st.none(), st.integers(1, 16)),
+)
+@settings(max_examples=20, deadline=None)
+def test_search_mesh_layout_invariants(searches, pop):
+    mesh = make_search_mesh(searches, pop)
+    _check_mesh_layout(mesh)
+    assert tuple(mesh.axis_names) == ("search", "data")
+
+
+@given(st.integers(1, 12), st.integers(1, 48), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_shape_spec_shards_only_divisible_dims(b, p, nd):
+    mesh = make_search_mesh()
+    shape = (b, p) + (space.N_GENES,) * (nd - 1) if nd > 1 else (b,)
+    spec = shape_spec(mesh, shape, pop_dim=1 if len(shape) > 1 else None)
+    sizes = mesh_axis_sizes(mesh)
+    assert len(spec) == len(shape)
+    for dim, part in enumerate(spec):
+        if part is not None:
+            group = int(np.prod([sizes[a] for a in part]))
+            assert shape[dim] % group == 0
+
+
+def test_plain_mesh_layout_invariants():
+    """Non-hypothesis anchor: the exact layouts the drivers build."""
+    _check_mesh_layout(make_test_mesh(1, 1))
+    _check_mesh_layout(make_search_mesh(1, 1))
+    _check_mesh_layout(make_mesh((1,), ("model",)))

@@ -1,9 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 gate + benchmark smoke, as run by .github/workflows/ci.yml:
-#   bash tools/ci.sh
+#   bash tools/ci.sh               # tier-1 on the host's real device set
+#   bash tools/ci.sh multidevice   # tier-1 + sharding tests + sharded bench
+#                                  # row on a fake 8-device host
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
-python -m benchmarks.run --quick
+if [[ "${1:-}" == "multidevice" ]]; then
+  # fake 8 XLA host devices so the @pytest.mark.multidevice sharding tests
+  # (tests/test_search_sharded.py) actually exercise the 2-D mesh on CPU CI
+  export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+  python -m pytest -x -q
+  python -m benchmarks.bench_search_throughput --quick --mesh 2x4
+else
+  python -m pytest -x -q
+  python -m benchmarks.run --quick
+fi
