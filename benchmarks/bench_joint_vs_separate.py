@@ -14,7 +14,9 @@ S * (1 + W) sequentially retraced GAs (~10x end-to-end on this container).
 
 ``--mesh [SEARCHxPOP]`` lays both programs out over a 2-D (search,
 population) device mesh (fake 8-device host on CPU) — same scores, the
-whole figure sharded over the fleet.
+whole figure sharded over the fleet.  ``--backend table`` runs both
+programs through the factorized grid-table cost model (same top designs,
+layer-depth-independent eval).
 """
 from __future__ import annotations
 
@@ -55,7 +57,8 @@ def per_workload_scores(
     return out
 
 
-def run(seeds: int = 5, verbose: bool = True, mesh=None) -> dict:
+def run(seeds: int = 5, verbose: bool = True, mesh=None,
+        backend: str = "jnp") -> dict:
     from repro.core.search import batched_search, joint_search_batched
     from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
     from repro.workloads.pack import pack_workloads
@@ -63,7 +66,7 @@ def run(seeds: int = 5, verbose: bool = True, mesh=None) -> dict:
     ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
     W = ws.n
     largest = "vgg16"
-    results = {"seeds": [], "pop": POP, "gens": GENS}
+    results = {"seeds": [], "pop": POP, "gens": GENS, "backend": backend}
     if mesh is not None:
         from repro.launch.mesh import describe
 
@@ -72,7 +75,8 @@ def run(seeds: int = 5, verbose: bool = True, mesh=None) -> dict:
     t0 = time.time()
     joint_keys = jnp.stack([jax.random.PRNGKey(s) for s in range(seeds)])
     joints = joint_search_batched(
-        joint_keys, ws, pop_size=POP, generations=GENS, top_k=TOPK, mesh=mesh
+        joint_keys, ws, pop_size=POP, generations=GENS, top_k=TOPK, mesh=mesh,
+        backend=backend,
     )
     t_joint = time.time() - t0
 
@@ -90,6 +94,7 @@ def run(seeds: int = 5, verbose: bool = True, mesh=None) -> dict:
         generations=GENS,
         top_k=TOPK,
         mesh=mesh,
+        backend=backend,
     )
     t_sep = time.time() - t0
     results["joint_wall_s_total"] = t_joint
@@ -160,10 +165,14 @@ def main(argv=None) -> int:
         "--mesh", nargs="?", const="auto", default=None, metavar="SEARCHxPOP",
         help="shard both figure programs over a (search, population) mesh",
     )
+    ap.add_argument(
+        "--backend", default="jnp", choices=["jnp", "pallas", "table"],
+        help="cost-model backend for both figure programs",
+    )
     args = ap.parse_args(argv)
 
     mesh = prepare_search_mesh(args.mesh) if args.mesh else None
-    out = run(seeds=args.seeds, mesh=mesh)
+    out = run(seeds=args.seeds, mesh=mesh, backend=args.backend)
 
     with open(exp_dir() / "fig2_joint_vs_separate.json", "w") as f:
         json.dump(out, f, indent=1)

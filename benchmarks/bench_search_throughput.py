@@ -16,7 +16,10 @@ trajectory.  The paper's 4 h for the same P x G search is the 1x line.
 population) device mesh (``launch.mesh.make_search_mesh``) and records the
 sharded row under the ``"sharded"`` key of the same json — on a CPU host
 it forces 8 fake XLA devices first, so the row proves the fleet layout
-end-to-end even without real hardware.  See benchmarks/README.md.
+end-to-end even without real hardware.  ``--backend table`` re-runs
+through the factorized grid-table cost model (``imc.tables``; eval
+independent of workload depth) and records the row under ``"table"``.
+See benchmarks/README.md.
 """
 from __future__ import annotations
 
@@ -37,7 +40,8 @@ def _block(results) -> None:
     jax.block_until_ready([r.ga.scores for r in results])
 
 
-def run(quick: bool = False, verbose: bool = True, mesh=None) -> dict:
+def run(quick: bool = False, verbose: bool = True, mesh=None,
+        backend: str = "jnp") -> dict:
     from repro.core.search import batched_search, joint_search_batched
     from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
     from repro.workloads.pack import pack_workloads
@@ -46,9 +50,11 @@ def run(quick: bool = False, verbose: bool = True, mesh=None) -> dict:
     # sharded rows use a seed count divisible by every 8-device search-axis
     # layout so the batch axis actually shards (ragged dims replicate)
     seeds = (4 if quick else 8) if mesh is not None else (2 if quick else 5)
+    warm_reps = 2 if quick else 3  # warm = best-of-N (steady state, not noise)
     per_search = POP * (GENS + 1)
     out = {
-        "pop": POP, "gens": GENS, "seeds": seeds,
+        "pop": POP, "gens": GENS, "seeds": seeds, "backend": backend,
+        "warm_reps": warm_reps,
         "paper_s_per_design": PAPER_S_PER_DESIGN,
     }
     if mesh is not None:
@@ -62,12 +68,15 @@ def run(quick: bool = False, verbose: bool = True, mesh=None) -> dict:
 
     t0 = time.time()
     _block(joint_search_batched(keys(0), ws, pop_size=POP, generations=GENS,
-                                mesh=mesh))
+                                mesh=mesh, backend=backend))
     cold = time.time() - t0
-    t0 = time.time()
-    _block(joint_search_batched(keys(1000), ws, pop_size=POP, generations=GENS,
-                                mesh=mesh))
-    warm = time.time() - t0
+    warm = float("inf")
+    for rep in range(warm_reps):
+        t0 = time.time()
+        _block(joint_search_batched(keys(1000 * (rep + 1)), ws, pop_size=POP,
+                                    generations=GENS, mesh=mesh,
+                                    backend=backend))
+        warm = min(warm, time.time() - t0)
     n = seeds * per_search
     out["joint"] = {
         "searches": seeds,
@@ -91,12 +100,16 @@ def run(quick: bool = False, verbose: bool = True, mesh=None) -> dict:
 
     t0 = time.time()
     _block(batched_search(sep_keys(0), sep_feats, sep_mask,
-                          pop_size=POP, generations=GENS, mesh=mesh))
+                          pop_size=POP, generations=GENS, mesh=mesh,
+                          backend=backend))
     cold = time.time() - t0
-    t0 = time.time()
-    _block(batched_search(sep_keys(1000), sep_feats, sep_mask,
-                          pop_size=POP, generations=GENS, mesh=mesh))
-    warm = time.time() - t0
+    warm = float("inf")
+    for rep in range(warm_reps):
+        t0 = time.time()
+        _block(batched_search(sep_keys(1000 * (rep + 1)), sep_feats, sep_mask,
+                              pop_size=POP, generations=GENS, mesh=mesh,
+                              backend=backend))
+        warm = min(warm, time.time() - t0)
     n = seeds * W * per_search
     out["separate"] = {
         "searches": seeds * W,
@@ -123,11 +136,30 @@ def main(argv=None) -> int:
         help="shard over a (search, population) mesh (e.g. 2x4; default: all "
              "devices on search) and record the row under 'sharded'",
     )
+    ap.add_argument(
+        "--backend", default="jnp", choices=["jnp", "pallas", "table"],
+        help="cost-model backend; 'table' records its row under 'table' "
+             "(the factorized-eval trajectory)",
+    )
     args = ap.parse_args(argv)
 
+    # each json row tracks ONE configuration: top-level = dense jnp
+    # unsharded, 'sharded' = dense jnp on the mesh, 'table' = table backend
+    # unsharded — refuse combinations that would overwrite a row with
+    # numbers from a different configuration
+    if args.mesh and args.backend != "jnp":
+        ap.error("--mesh records the dense-jnp 'sharded' row; "
+                 "combine it with --backend jnp only")
     mesh = prepare_search_mesh(args.mesh) if args.mesh else None
-    res = run(quick=args.quick, mesh=mesh)
-    write_search_throughput(res, sharded=mesh is not None)
+    res = run(quick=args.quick, mesh=mesh, backend=args.backend)
+    if args.backend == "pallas":
+        print("[search-thru] pallas run not recorded (no tracked row; "
+              "interpret-mode timing off-TPU is not meaningful)")
+        return 0
+    row = "sharded" if mesh is not None else (
+        "table" if args.backend == "table" else None
+    )
+    write_search_throughput(res, row=row)
     return 0
 
 

@@ -3,8 +3,9 @@ CPU cores == ~36 s per design evaluated).
 
 Measures:
   * vectorized evaluator throughput (designs/s) at several population
-    sizes — the jnp path and the Pallas imc_eval kernel (interpret mode
-    on CPU; compiled-TPU numbers are the target),
+    sizes — the dense jnp path AND the factorized table path
+    (``imc.tables``; the Pallas imc_eval kernel runs interpret-mode on
+    CPU, compiled-TPU numbers are the target),
   * full GA generation throughput (eval + select + SBX + mutate, jitted).
 """
 from __future__ import annotations
@@ -37,6 +38,8 @@ def _time(f, *args, n=3):
 
 
 def run(verbose: bool = True) -> dict:
+    from repro.imc.tables import evaluate_genomes_tables
+
     ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
     obj = make_objective("ela", 150.0)
     out = {"paper_s_per_design": PAPER_S_PER_DESIGN, "eval": [], "ga": []}
@@ -45,15 +48,24 @@ def run(verbose: bool = True) -> dict:
     def eval_pop(genomes):
         return obj(evaluate_designs(space.decode(genomes), ws))
 
-    for pop in (40, 1024, 16384):
-        g = space.random_genomes(jax.random.PRNGKey(0), pop)
-        dt = _time(eval_pop, g)
-        rate = pop / dt
-        out["eval"].append({"pop": pop, "s": dt, "designs_per_s": rate,
-                            "speedup_vs_paper": rate * PAPER_S_PER_DESIGN})
-        if verbose:
-            print(f"[thru] eval pop={pop:6d}: {rate:9.0f} designs/s "
-                  f"({rate * PAPER_S_PER_DESIGN:.0f}x paper)")
+    tables = ws.tables()
+
+    @jax.jit
+    def eval_pop_table(genomes):
+        return obj(evaluate_genomes_tables(genomes, tables))
+
+    for backend, fn in (("jnp", eval_pop), ("table", eval_pop_table)):
+        for pop in (40, 1024, 16384):
+            g = space.random_genomes(jax.random.PRNGKey(0), pop)
+            dt = _time(fn, g)
+            rate = pop / dt
+            out["eval"].append({"backend": backend, "pop": pop, "s": dt,
+                                "designs_per_s": rate,
+                                "speedup_vs_paper": rate * PAPER_S_PER_DESIGN})
+            if verbose:
+                print(f"[thru] eval[{backend:5s}] pop={pop:6d}: "
+                      f"{rate:9.0f} designs/s "
+                      f"({rate * PAPER_S_PER_DESIGN:.0f}x paper)")
 
     eval_fn = make_eval_fn(ws, "ela", 150.0)
     init = seed_population(jax.random.PRNGKey(1), ws, 40)

@@ -45,20 +45,27 @@ def prepare_search_mesh(spec: str):
     return make_search_mesh(s, p)
 
 
-def write_search_throughput(res: dict, *, sharded: bool = False) -> Path:
-    """Write ``experiments/search_throughput.json``, keeping the unsharded
-    trajectory rows and the ``'sharded'`` row consistent no matter which
-    entry point (benchmarks.run or bench_search_throughput --mesh) wrote
-    last."""
+# named rows kept alongside the top-level (dense, unsharded) trajectory
+EXTRA_ROWS = ("sharded", "table")
+
+
+def write_search_throughput(res: dict, *, row: str = None) -> Path:
+    """Write ``experiments/search_throughput.json``.  ``row=None`` replaces
+    the top-level (dense jnp, unsharded) trajectory; ``row="sharded"`` /
+    ``row="table"`` updates that named row in place — every entry point
+    (benchmarks.run, bench_search_throughput --mesh / --backend) keeps the
+    other rows intact."""
     path = exp_dir() / "search_throughput.json"
     prior = json.loads(path.read_text()) if path.exists() else {}
-    if sharded:
-        out = prior
-        out["sharded"] = res
-    else:
+    if row is None:
         out = res
-        if "sharded" in prior:
-            out["sharded"] = prior["sharded"]
+        for r in EXTRA_ROWS:
+            if r in prior:
+                out[r] = prior[r]
+    else:
+        assert row in EXTRA_ROWS, row
+        out = prior
+        out[row] = res
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
     return path
@@ -92,6 +99,10 @@ def main(argv=None) -> int:
     print("\n== search throughput (batched one-jit stack; tracked trajectory) ==")
     sthru = bench_search_throughput.run(quick=args.quick)
     write_search_throughput(sthru)
+
+    print("\n== search throughput (factorized table backend) ==")
+    sthru_t = bench_search_throughput.run(quick=args.quick, backend="table")
+    write_search_throughput(sthru_t, row="table")
 
     print("\n== Fig. 2: joint vs separate ==")
     fig2 = bench_joint_vs_separate.run(seeds=1 if args.quick else 5)

@@ -153,12 +153,16 @@ def sharded_batched_eval_fn(
     """Batched ``eval_fn(genomes (B, P, n), ctx) -> scores (B, P)`` with the
     2-D (search, population) layout annotated via sharding constraints.
 
-    ``ctx`` is ``(feats (B, W, L, 6), mask (B, W, L))`` — or, with
-    ``objective=None``, ``(feats, mask, weights (B, 3))`` scored by the
+    ``ctx`` is ``(feats (B, W, L, 6), mask (B, W, L))`` — or, for
+    ``backend="table"``, ``(tables,)`` with ``tables`` an
+    ``imc.tables.WorkloadTables`` pytree whose every leaf carries the
+    leading B axis (tables are just more batched leaves: ``place_batched``
+    pins them to the ``search`` mesh axis like feats/mask).  With
+    ``objective=None`` a trailing ``weights (B, 3)`` leaf selects the
     exponent-weighted objective.  Reuses the cached ``core.search`` eval
     callbacks, so the same compiled cost model backs sharded and unsharded
-    paths.  Used by the fleet dry-run (launch/dryrun.py --search-mesh) and
-    standalone batched rescoring.
+    paths.  Used by the fleet dry-run (launch/dryrun.py --search-mesh
+    [--backend table]) and standalone batched rescoring.
     """
     from repro.core.search import _ctx_eval  # deferred: search imports us
 

@@ -24,6 +24,14 @@ tech, backend) — repeated searches of the same shape never retrace.  The
 batched drivers take ``mesh=`` (``launch.mesh.make_search_mesh``) to lay
 the B independent GAs out over a 2-D (search, population) device mesh —
 see ``core.distributed`` — with bit-identical scores.
+
+Three evaluation backends (``backend=``): ``"jnp"`` (dense (P, W, L)
+oracle), ``"pallas"`` (the imc_eval TPU kernel), and ``"table"`` — the
+factorized cost model (``imc.tables``): the layer axis is reduced once per
+workload set into grid tables that travel through the traced ``ctx``, and
+every per-generation evaluation is O(W) gathers per design, independent of
+workload depth L.  Scores are allclose across backends and the table path
+picks identical top designs on the paper CNN set (tests/test_tables.py).
 Measured on this container (benchmarks/bench_joint_vs_separate, 5 seeds =
 5 joint + 20 separate GAs): 83 s sequential -> 15 s batched cold
 (5.5x, including XLA compile of the two programs) -> 2 s with a warm
@@ -69,37 +77,72 @@ class SearchResult:
 
 
 # --------------------------------------------------------- eval callbacks
+BACKENDS = ("jnp", "pallas", "table")
+
+
 @lru_cache(maxsize=None)
 def _ctx_eval(
     objective: Optional[str], area_constr: float, tech: TechParams, backend: str
 ) -> Callable:
     """Cached ``eval_fn(genomes, ctx)`` with ``ctx = (feats (W, L, 6),
-    mask (W, L))`` — or, when ``objective`` is ``None``, ``ctx = (feats,
-    mask, weights (3,))`` scored by the exponent-weighted objective.  The
-    cache (plus workload tensors being traced, not closed over) is what
-    keeps the GA jit from retracing across seeds and workload sets."""
+    mask (W, L))`` — or, for ``backend="table"``, ``ctx = (tables,)`` with
+    ``tables`` an ``imc.tables.WorkloadTables`` pytree (``_eval_ctx`` builds
+    the right one).  When ``objective`` is ``None`` a trailing ``weights
+    (3,)`` leaf selects the exponent-weighted objective.  The cache (plus
+    workload tensors/tables being traced, not closed over) is what keeps
+    the GA jit from retracing across seeds and workload sets."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     obj = (
         make_weighted_objective(area_constr)
         if objective is None
         else make_objective(objective, area_constr)
     )
 
-    if backend == "pallas":
+    if backend == "table":
+        from repro.imc.tables import evaluate_genomes_tables
+
+        def ev(genomes, ctx):
+            return evaluate_genomes_tables(genomes, ctx[0], tech)
+
+    elif backend == "pallas":
         from repro.kernels.imc_eval.ops import evaluate_designs_kernel_arrays
 
-        def ev(d, feats, mask):
-            return evaluate_designs_kernel_arrays(d, feats, mask, tech)
+        def ev(genomes, ctx):
+            return evaluate_designs_kernel_arrays(
+                space.decode(genomes), ctx[0], ctx[1], tech
+            )
 
     else:
 
-        def ev(d, feats, mask):
-            return evaluate_designs_arrays(d, feats, mask, tech)
+        def ev(genomes, ctx):
+            return evaluate_designs_arrays(space.decode(genomes), ctx[0], ctx[1], tech)
 
     def eval_fn(genomes: jnp.ndarray, ctx) -> jnp.ndarray:
-        r = ev(space.decode(genomes), ctx[0], ctx[1])
-        return obj(r, ctx[2]) if objective is None else obj(r)
+        r = ev(genomes, ctx)
+        return obj(r, ctx[-1]) if objective is None else obj(r)
 
     return eval_fn
+
+
+def _eval_ctx(
+    feats: jnp.ndarray,
+    mask: jnp.ndarray,
+    tech: TechParams,
+    backend: str,
+    *,
+    batched: bool = False,
+) -> Tuple:
+    """The workload half of an eval ``ctx`` for ``backend``: the raw
+    ``(feats, mask)`` tensors, or — for the table backend — the factorized
+    ``(tables,)`` statistics, reduced over the layer axis here, ONCE, so
+    the per-generation evaluation never sees L again."""
+    if backend != "table":
+        return (feats, mask)
+    from repro.imc.tables import build_tables_arrays, build_tables_batched
+
+    build = build_tables_batched if batched else build_tables_arrays
+    return (build(feats, mask, tech),)
 
 
 def make_eval_fn(
@@ -110,10 +153,12 @@ def make_eval_fn(
     *,
     backend: str = "jnp",
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
-    """backend: "jnp" (portable) or "pallas" (the imc_eval TPU kernel;
-    interpret-mode on CPU — numerically identical, see tests)."""
+    """backend: "jnp" (portable), "pallas" (the imc_eval TPU kernel;
+    interpret-mode off-TPU — numerically identical, see tests) or "table"
+    (factorized per-workload grid tables: O(W) gathers per design, no
+    layer axis — allclose to "jnp", see tests/test_tables.py)."""
     fn = _ctx_eval(objective, float(area_constr), tech, backend)
-    ctx = (ws.feats, ws.mask)
+    ctx = (ws.tables(tech),) if backend == "table" else (ws.feats, ws.mask)
 
     def eval_fn(genomes: jnp.ndarray) -> jnp.ndarray:
         return fn(genomes, ctx)
@@ -175,8 +220,13 @@ def _seed_jit(key, feats, mask, *, pop_size, oversample, max_rounds, tech):
 
 @partial(jax.jit, static_argnames=_SEED_STATICS)
 def _seed_batched_jit(keys, feats, mask, *, pop_size, oversample, max_rounds, tech):
+    """keys (B, 2), feats (B, W, L, 6), mask (B, W, L).  Each element's
+    largest workload is picked as a TRACED argmax+gather inside the
+    program — no host-side device sync before the seeding launch."""
+
     def one(k, ft, mk):
-        return _seed_rounds(k, ft, mk, pop_size, oversample, max_rounds, tech)
+        li = jnp.argmax(_workload_weights(ft, mk))
+        return _seed_rounds(k, ft[li], mk[li], pop_size, oversample, max_rounds, tech)
 
     return jax.vmap(one)(keys, feats, mask)
 
@@ -219,21 +269,20 @@ def seed_population_batched(
 ) -> jnp.ndarray:
     """Per-batch-element seeding: keys (B, 2), feats (B, W, L, 6), mask
     (B, W, L) -> pools (B, pop_size, n).  Each element rejects against its
-    own largest workload, all under one vmapped while-loop.  With ``mesh``
-    (a ``launch.mesh.make_search_mesh`` layout) the batch axis is committed
+    own largest workload — selected by a traced argmax INSIDE the jit, so
+    nothing blocks on device between the call and the seeding launch — all
+    under one vmapped while-loop.  With ``mesh`` (a
+    ``launch.mesh.make_search_mesh`` layout) the batch axis is committed
     to the ``search`` mesh axis before the launch, so each mesh slice seeds
     its own searches."""
-    li = np.asarray(jnp.argmax(_workload_weights(feats, mask), axis=-1))  # (B,)
-    b_idx = np.arange(feats.shape[0])
-    feats_l, mask_l = feats[b_idx, li], mask[b_idx, li]
     if mesh is not None:
         from repro.core.distributed import place_batched
 
         keys = place_batched(mesh, keys)
-        feats_l = place_batched(mesh, feats_l)
-        mask_l = place_batched(mesh, mask_l)
+        feats = place_batched(mesh, feats)
+        mask = place_batched(mesh, mask)
     pools, counts = _seed_batched_jit(
-        keys, feats_l, mask_l,
+        keys, feats, mask,
         pop_size=int(pop_size), oversample=int(oversample),
         max_rounds=int(max_rounds), tech=tech,
     )
@@ -251,22 +300,20 @@ def seed_population_batched(
 def _top_unique(
     genomes: np.ndarray, scores: np.ndarray, k: int
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Best-k designs, unique in *decoded grid index* space."""
-    idx = np.asarray(space.decode_indices(jnp.asarray(genomes)))
-    order = np.argsort(scores)
-    seen = set()
-    keep = []
-    for i in order:
-        if not np.isfinite(scores[i]):
-            break
-        t = tuple(idx[i])
-        if t in seen:
-            continue
-        seen.add(t)
-        keep.append(i)
-        if len(keep) == k:
-            break
-    keep = np.array(keep, np.int64) if keep else np.zeros((0,), np.int64)
+    """Best-k designs, unique in *decoded grid index* space.
+
+    Fully vectorized host-side numpy (``np.unique`` over score-sorted grid
+    indices instead of a Python loop over all G*P designs, and a host
+    decode instead of per-call jnp dispatches): sorting by score first
+    means each unique design's first occurrence is its best-scoring one,
+    and non-finite scores (inf/nan) sort to the end, so dropping them
+    equals the old truncate-at-first-non-finite rule."""
+    idx = space.decode_indices_np(genomes)
+    order = np.argsort(scores, kind="stable")
+    _, first = np.unique(idx[order], axis=0, return_index=True)
+    first.sort()  # positions within `order`, ascending = best-first
+    keep = order[first]
+    keep = keep[np.isfinite(scores[keep])][:k]
     return genomes[keep], scores[keep]
 
 
@@ -277,10 +324,7 @@ def _finalize(
     flat_g = np.asarray(ga.genomes).reshape(-1, n)
     flat_s = np.asarray(ga.scores).reshape(-1)
     top_g, top_s = _top_unique(flat_g, flat_s, top_k)
-    designs = space.decode(jnp.asarray(top_g)) if len(top_g) else None
-    top_designs = [
-        space.design_dict(designs, i) for i in range(len(top_g))
-    ] if designs is not None else []
+    top_designs = space.design_dicts_from_indices(space.decode_indices_np(top_g))
     conv = np.minimum.accumulate(np.asarray(ga.scores).min(axis=1))
     return SearchResult(
         workload_names=tuple(names),
@@ -319,7 +363,7 @@ def run_search(
         pop_size=pop_size,
         generations=generations,
         init_genomes=init_genomes,
-        ctx=(ws.feats, ws.mask),
+        ctx=_eval_ctx(ws.feats, ws.mask, tech, backend),
     )
     return _finalize(ga, ws.names, objective, top_k)
 
@@ -382,11 +426,16 @@ def batched_search(
     else:
         init_genomes = jnp.array(init_genomes)  # copy: the GA donates its init
     init_genomes = place(init_genomes, pop_dim=1)
+    # table backend: reduce the layer axis ONCE per element here; the GA's
+    # per-generation evals then gather from the (search-sharded) tables
+    ctx = tuple(
+        jax.tree_util.tree_map(place, c)
+        for c in _eval_ctx(feats, mask, tech, backend, batched=True)
+    )
     if obj_weights is None:
-        ctx = (feats, mask)
         eval_fn = _ctx_eval(objective, float(area_constr), tech, backend)
     else:
-        ctx = (feats, mask, place(jnp.asarray(obj_weights, jnp.float32)))
+        ctx = ctx + (place(jnp.asarray(obj_weights, jnp.float32)),)
         eval_fn = _ctx_eval(None, float(area_constr), tech, backend)
     ga = run_ga_batched(
         k_ga,
@@ -412,8 +461,10 @@ def batched_search(
         labels = [
             inv.get(tuple(wv[b]), f"weighted{tuple(wv[b])}") for b in range(B)
         ]
+    # one device->host transfer per field, then pure-numpy per-element prep
+    ga_np = GAResult(*(np.asarray(f) for f in ga))
     return [
-        _finalize(GAResult(*(f[b] for f in ga)), names_b[b], labels[b], top_k)
+        _finalize(GAResult(*(f[b] for f in ga_np)), names_b[b], labels[b], top_k)
         for b in range(B)
     ]
 

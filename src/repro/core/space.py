@@ -43,12 +43,14 @@ _GRIDS = [jnp.asarray(SPACE[f]) for f in FIELDS]
 
 def decode(genomes: jnp.ndarray) -> DesignArrays:
     """(P, 9) floats in [0,1) -> decoded design value arrays (each (P,))."""
-    cols = []
-    for i, grid in enumerate(_GRIDS):
-        n = grid.shape[0]
-        idx = jnp.clip((genomes[:, i] * n).astype(jnp.int32), 0, n - 1)
-        cols.append(grid[idx])
-    return DesignArrays(*cols)
+    return designs_from_indices(decode_indices(genomes))
+
+
+def designs_from_indices(idx: jnp.ndarray) -> DesignArrays:
+    """(P, 9) integer grid indices -> decoded design value arrays.  The
+    gather half of ``decode``; the table-backend evaluator
+    (``imc.tables``) calls it directly on ``decode_indices`` output."""
+    return DesignArrays(*(grid[idx[:, i]] for i, grid in enumerate(_GRIDS)))
 
 
 def decode_indices(genomes: jnp.ndarray) -> jnp.ndarray:
@@ -60,13 +62,28 @@ def decode_indices(genomes: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack(out, axis=1)
 
 
+def decode_indices_np(genomes: np.ndarray) -> np.ndarray:
+    """Host-side ``decode_indices`` (same float32 arithmetic, so identical
+    indices) — result preparation decodes whole population histories
+    without a device round-trip per design."""
+    g = np.asarray(genomes, np.float32)
+    sizes = GRID_SIZES.astype(np.float32)[None, :]
+    idx = (g * sizes).astype(np.int32)
+    return np.clip(idx, 0, GRID_SIZES[None, :] - 1)
+
+
 def genome_from_indices(idx: np.ndarray) -> np.ndarray:
     """Integer indices (P, 9) -> genome centered in each grid cell."""
     return (np.asarray(idx, np.float64) + 0.5) / GRID_SIZES[None, :]
 
 
-def design_dict(d: DesignArrays, i: int) -> Dict[str, float]:
-    return {f: float(getattr(d, f)[i]) for f in FIELDS}
+def design_dicts_from_indices(idx: np.ndarray) -> List[Dict[str, float]]:
+    """Host-side: (P, 9) integer grid indices -> per-design name->value
+    dicts (the single definition of the design-dict format)."""
+    return [
+        {f: float(SPACE[f][idx[i, j]]) for j, f in enumerate(FIELDS)}
+        for i in range(len(idx))
+    ]
 
 
 def random_genomes(key: jax.Array, n: int) -> jnp.ndarray:

@@ -1,6 +1,12 @@
 from repro.imc.tech import TECH, TechParams  # noqa: F401
 from repro.imc.cost import (  # noqa: F401
     DesignArrays,
+    design_valid,
     evaluate_designs,
     evaluate_one,
 )
+
+# NOTE: repro.imc.tables (the factorized grid-table cost model) is imported
+# lazily by its users, never here: tables depends on repro.core.space for
+# the grid definitions and space depends on this package — importing it at
+# package-init time would re-enter a partially-initialized module.

@@ -69,6 +69,13 @@ def _ceil_div(a, b):
     return jnp.ceil(a / b)
 
 
+def design_valid(d: DesignArrays, tech: TechParams = TECH) -> jnp.ndarray:
+    """V/f self-consistency (P,): alpha-power-law minimum cycle at V_op."""
+    k = (tech.v_nominal - tech.v_th) ** tech.alpha_power / tech.v_nominal
+    t_min = k * d.v_op / (d.v_op - tech.v_th) ** tech.alpha_power
+    return d.t_cycle_ns >= t_min
+
+
 def area_mm2(d: DesignArrays, tech: TechParams = TECH) -> jnp.ndarray:
     """Provisioned chip area (independent of workload)."""
     n_tiles = d.g_per_chip * d.t_per_router
@@ -165,10 +172,7 @@ def evaluate_designs_arrays(
 
     energy = e_analog + e_adc + e_dac + e_route + e_buf + e_dram + e_leak
 
-    # ---------------- design validity (V/f) ----------------------------------
-    k = (tech.v_nominal - tech.v_th) ** tech.alpha_power / tech.v_nominal
-    t_min = k * d.v_op / (d.v_op - tech.v_th) ** tech.alpha_power
-    valid = d.t_cycle_ns >= t_min
+    valid = design_valid(d, tech)
 
     return EvalResult(
         energy_pj=energy,

@@ -1,0 +1,173 @@
+"""Factorized IMC cost model: per-workload grid tables -> O(W) gathers.
+
+``imc.cost.evaluate_designs_arrays`` re-reduces the full (P, W, L) layer
+tensor on every call even though the search space is a tiny discrete grid
+(``core.space``: 5 rows x 5 cols x 4 bits_cell, 10 GLB sizes) and every
+layer-sum in the model is either design-independent or separable through a
+handful of grid-indexed ceil terms.  This module reduces the layer axis
+ONCE per workload into sufficient statistics:
+
+  demand[w, r, c, b] = sum_l ceil(K/rows_r) * ceil(N*cpw_b/cols_c) * G     (R, C, Bc)
+  dac[w, c, b]       = sum_l M * K * ceil(N*cpw_b/cols_c) * G              (C, Bc)
+  spill[w, g]        = sum_l max(bytes_l - glb_g, 0)                       (Gn,)
+  sum_m, sum_bytes, sum_mkng, sum_mng                                      scalars
+
+(each masked by the layer mask), after which scoring a design is O(W)
+table gathers at its ``space.decode_indices`` grid indices plus ~20 scalar
+flops — independent of workload depth L.  Term structure mirrors
+``evaluate_designs_arrays`` exactly; the dense path stays the oracle
+(parity asserted in tests/test_tables.py and test_properties.py).
+
+Tables are plain pytrees (NamedTuple of arrays), so they travel as traced
+``ctx`` through the cached GA jits (``core.search`` ``backend="table"``),
+vmap over a leading batch axis (``build_tables_batched``) and shard over
+the ``search`` mesh axis like any other batched leaf
+(``core.distributed.place_batched``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import space
+from repro.imc.cost import EvalResult, area_mm2, design_valid
+from repro.imc.tech import TECH, TechParams
+
+# grid-index columns of a decoded (P, 9) index matrix (space.FIELDS order)
+_I_ROWS = space.FIELDS.index("rows")
+_I_COLS = space.FIELDS.index("cols")
+_I_BITS = space.FIELDS.index("bits_cell")
+_I_GLB = space.FIELDS.index("glb_mb")
+
+
+class WorkloadTables(NamedTuple):
+    """Per-workload sufficient statistics; every field has leading dim W
+    (or (B, W) when built batched)."""
+
+    demand: jnp.ndarray  # (W, R, C, Bc) crossbar demand per (rows, cols, bits)
+    dac: jnp.ndarray  # (W, C, Bc)  sum M*K*ceil(N*cpw/cols)*G
+    spill: jnp.ndarray  # (W, Gn)   sum max(bytes_l - glb, 0)
+    sum_m: jnp.ndarray  # (W,)      sum M
+    sum_bytes: jnp.ndarray  # (W,)  sum (A_in + A_out)
+    sum_mkng: jnp.ndarray  # (W,)   sum M*K*N*G
+    sum_mng: jnp.ndarray  # (W,)    sum M*N*G
+
+
+def _build(feats: jnp.ndarray, mask: jnp.ndarray, tech: TechParams) -> WorkloadTables:
+    """feats (W, L, 6), mask (W, L) -> tables.  Pure jnp; jit/vmap friendly."""
+    M, K, N, A_in, A_out, G = [feats[..., i].astype(jnp.float32) for i in range(6)]
+    mk = mask.astype(jnp.float32)
+
+    rows_g = jnp.asarray(space.SPACE["rows"])  # (R,)
+    cols_g = jnp.asarray(space.SPACE["cols"])  # (C,)
+    bits_g = jnp.asarray(space.SPACE["bits_cell"])  # (Bc,)
+    glb_g = jnp.asarray(space.SPACE["glb_mb"]) * jnp.float32(1 << 20)  # (Gn,) bytes
+
+    cpw = jnp.ceil(jnp.float32(tech.weight_bits) / bits_g)  # (Bc,)
+    row_splits = jnp.ceil(K[..., None] / rows_g)  # (W, L, R)
+    col_splits = jnp.ceil(N[..., None, None] * cpw / cols_g[:, None])  # (W, L, C, Bc)
+
+    gm = G * mk  # (W, L)
+    demand = (
+        row_splits[..., :, None, None] * col_splits[..., None, :, :]
+        * gm[..., None, None, None]
+    ).sum(-4)  # (W, R, C, Bc)
+    dac = ((M * K * gm)[..., None, None] * col_splits).sum(-3)  # (W, C, Bc)
+
+    bytes_l = A_in + A_out
+    spill = (jnp.maximum(bytes_l[..., None] - glb_g, 0.0) * mk[..., None]).sum(-2)
+
+    return WorkloadTables(
+        demand=demand,
+        dac=dac,
+        spill=spill,
+        sum_m=(M * mk).sum(-1),
+        sum_bytes=(bytes_l * mk).sum(-1),
+        sum_mkng=(M * K * N * G * mk).sum(-1),
+        sum_mng=(M * N * G * mk).sum(-1),
+    )
+
+
+@partial(jax.jit, static_argnames=("tech",))
+def build_tables_arrays(
+    feats: jnp.ndarray, mask: jnp.ndarray, tech: TechParams = TECH
+) -> WorkloadTables:
+    """One workload set: feats (W, L, 6), mask (W, L) -> W-leading tables."""
+    return _build(feats, mask, tech)
+
+
+@partial(jax.jit, static_argnames=("tech",))
+def build_tables_batched(
+    feats: jnp.ndarray, mask: jnp.ndarray, tech: TechParams = TECH
+) -> WorkloadTables:
+    """Batched workload sets: feats (B, W, L, 6), mask (B, W, L) -> tables
+    with a leading B axis on every leaf (one slice per batched search)."""
+    return jax.vmap(lambda f, m: _build(f, m, tech))(feats, mask)
+
+
+def evaluate_designs_tables(
+    idx: jnp.ndarray, tables: WorkloadTables, tech: TechParams = TECH
+) -> EvalResult:
+    """Score designs given as (P, 9) integer grid indices
+    (``space.decode_indices``) against precomputed tables — no layer axis
+    anywhere: per design it is 3 table gathers + scalar algebra."""
+    d = space.designs_from_indices(idx)
+    ri, ci = idx[:, _I_ROWS], idx[:, _I_COLS]
+    bi, gi = idx[:, _I_BITS], idx[:, _I_GLB]
+
+    demand = tables.demand[:, ri, ci, bi].T  # (P, W)
+    dac_t = tables.dac[:, ci, bi].T  # (P, W)
+    spill = tables.spill[:, gi].T  # (P, W)
+
+    capacity = (d.g_per_chip * d.t_per_router * d.c_per_tile).astype(jnp.float32)
+    fits = demand <= capacity[:, None]
+    util = demand / capacity[:, None]
+
+    # design-side coefficients, (P, 1) against workload scalars (1, W)
+    t_cyc = d.t_cycle_ns[:, None]
+    phases = jnp.float32(tech.input_bits)
+    cpw = jnp.ceil(jnp.float32(tech.weight_bits) / d.bits_cell)[:, None]
+
+    # ---------------- latency ------------------------------------------------
+    l_comp = tables.sum_m[None, :] * (phases * tech.adc_share) * t_cyc
+    l_comm = (
+        tables.sum_bytes[None, :]
+        / (d.g_per_chip[:, None] * tech.router_flit_bytes)
+        * t_cyc
+    )
+    l_dram = spill / tech.dram_bw_bytes_per_ns
+    latency = l_comp + l_comm + l_dram  # (P, W)
+
+    # ---------------- energy -------------------------------------------------
+    e_cell = (d.v_op**2 * tech.g_avg_s * d.t_cycle_ns * 1e3)[:, None]
+    e_analog = tables.sum_mkng[None, :] * phases * cpw * e_cell
+    e_adc = tables.sum_mng[None, :] * phases * cpw * tech.adc_energy_pj
+    e_dac = dac_t * phases * tech.dac_energy_pj
+    e_route = tables.sum_bytes[None, :] * tech.router_energy_pj_per_byte
+    e_buf = tables.sum_bytes[None, :] * (
+        tech.tile_buf_energy_pj_per_byte + tech.glb_energy_pj_per_byte
+    )
+    e_dram = spill * tech.dram_energy_pj_per_byte
+
+    area = area_mm2(d, tech)  # (P,)
+    e_leak = tech.leak_mw_per_mm2 * area[:, None] * latency
+    energy = e_analog + e_adc + e_dac + e_route + e_buf + e_dram + e_leak
+
+    return EvalResult(
+        energy_pj=energy,
+        latency_ns=latency,
+        area_mm2=area,
+        fits=fits,
+        valid=design_valid(d, tech),
+        util=util,
+    )
+
+
+def evaluate_genomes_tables(
+    genomes: jnp.ndarray, tables: WorkloadTables, tech: TechParams = TECH
+) -> EvalResult:
+    """Convenience: (P, n) genomes in [0, 1) -> table-path EvalResult."""
+    return evaluate_designs_tables(space.decode_indices(genomes), tables, tech)

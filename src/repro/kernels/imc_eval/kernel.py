@@ -23,7 +23,7 @@ pure 8x128 VPU tiles, one pass over HBM for all W layer tables.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,13 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 
 LANE = 128  # designs per tile (lane axis)
 SUB = 8  # layers per tile (sublane axis)
+
+
+def default_interpret() -> bool:
+    """Interpret the kernel unless the default backend is a real TPU, so
+    TPU runs get the Mosaic-compiled kernel with no flag and CPU/GPU hosts
+    (this container, CI) keep working via the interpreter."""
+    return jax.default_backend() != "tpu"
 
 
 def _eval_kernel(
@@ -110,11 +117,13 @@ def imc_eval_pallas_multi(
     mask: jnp.ndarray,  # (W, L)
     *,
     tech: TechParams = TECH,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Pad, tile and launch ONCE for the whole workload set.
 
     Returns (energy, latency, demand), each (W, P)."""
+    if interpret is None:
+        interpret = default_interpret()
     P = designs.shape[0]
     W, L = feats.shape[0], feats.shape[1]
     Pp = -(-P // LANE) * LANE
@@ -158,7 +167,7 @@ def imc_eval_pallas(
     mask: jnp.ndarray,  # (L,)
     *,
     tech: TechParams = TECH,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Single-workload convenience wrapper.  Returns (P,) each."""
     e, l, x = imc_eval_pallas_multi(

@@ -9,18 +9,22 @@ that fuse into the surrounding jit (e.g. the GA's objective reduction).
 ``backend="jnp"`` selects the pure-jnp oracle path (identical math); tests
 assert allclose between the two across shape/dtype sweeps, and that the
 multi-workload path issues exactly one kernel launch.
+
+``interpret=None`` (the default) auto-detects the platform: the kernel is
+COMPILED on TPU backends and interpreted elsewhere (CPU/GPU hosts, CI) —
+so real-TPU runs get the Mosaic-compiled kernel without any flag.
 """
 from __future__ import annotations
 
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.imc.cost import DesignArrays, EvalResult, area_mm2
+from repro.imc.cost import DesignArrays, EvalResult, area_mm2, design_valid
 from repro.imc.tech import TECH, TechParams
 from repro.kernels.imc_eval import ref as ref_mod
-from repro.kernels.imc_eval.kernel import imc_eval_pallas_multi
+from repro.kernels.imc_eval.kernel import default_interpret, imc_eval_pallas_multi
 from repro.workloads.pack import WorkloadSet
 
 
@@ -31,8 +35,10 @@ def evaluate_designs_kernel_arrays(
     tech: TechParams = TECH,
     *,
     backend: Literal["pallas", "jnp"] = "pallas",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> EvalResult:
+    if interpret is None:
+        interpret = default_interpret()
     designs = jnp.stack(list(d), axis=1).astype(jnp.float32)  # (P, 9)
 
     if backend == "pallas":
@@ -54,9 +60,7 @@ def evaluate_designs_kernel_arrays(
     fits = demand <= capacity[:, None]
     util = demand / capacity[:, None]
 
-    k = (tech.v_nominal - tech.v_th) ** tech.alpha_power / tech.v_nominal
-    t_min = k * d.v_op / (d.v_op - tech.v_th) ** tech.alpha_power
-    valid = d.t_cycle_ns >= t_min
+    valid = design_valid(d, tech)
 
     return EvalResult(
         energy_pj=energy,
@@ -74,7 +78,7 @@ def evaluate_designs_kernel(
     tech: TechParams = TECH,
     *,
     backend: Literal["pallas", "jnp"] = "pallas",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> EvalResult:
     return evaluate_designs_kernel_arrays(
         d, ws.feats, ws.mask, tech, backend=backend, interpret=interpret

@@ -291,12 +291,15 @@ def dryrun_paper_search(mesh, *, pop_size: int = 4096, save: bool = True) -> Dic
 
 def dryrun_paper_search_batched(
     mesh, *, searches: Optional[int] = None, pop_size: int = 1024,
-    save: bool = True,
+    save: bool = True, backend: str = "jnp",
 ) -> Dict[str, Any]:
     """Dry-run the FLEET DSE eval: B independent searches' populations,
     batch axis on the ``search`` mesh axis, population axis on ``data``
     (``core.distributed.sharded_batched_eval_fn``) — the pod-fleet layout
-    behind ``batched_search(..., mesh=...)``."""
+    behind ``batched_search(..., mesh=...)``.  ``backend="table"`` lowers
+    the factorized-table evaluator instead: its traced ctx is the
+    ``imc.tables.WorkloadTables`` pytree (search-sharded like any other
+    batched leaf), so the compiled program has no layer axis at all."""
     import jax.numpy as jnp
 
     from repro.core import space
@@ -307,22 +310,31 @@ def dryrun_paper_search_batched(
 
     ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
     B = searches or mesh_axis_sizes(mesh).get("search", 1)
-    eval_fn = sharded_batched_eval_fn(mesh, "ela", 150.0)
+    eval_fn = sharded_batched_eval_fn(mesh, "ela", 150.0, backend=backend)
     genomes = jax.ShapeDtypeStruct((B, pop_size, space.N_GENES), jnp.float32)
-    ctx = (
-        jax.ShapeDtypeStruct((B,) + ws.feats.shape, ws.feats.dtype),
-        jax.ShapeDtypeStruct((B,) + ws.mask.shape, ws.mask.dtype),
-    )
+    if backend == "table":
+        tables = ws.tables()
+        ctx = (
+            jax.tree_util.tree_map(
+                lambda t: jax.ShapeDtypeStruct((B,) + t.shape, t.dtype), tables
+            ),
+        )
+    else:
+        ctx = (
+            jax.ShapeDtypeStruct((B,) + ws.feats.shape, ws.feats.dtype),
+            jax.ShapeDtypeStruct((B,) + ws.mask.shape, ws.mask.dtype),
+        )
     compiled = eval_fn.lower(genomes, ctx).compile()
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):  # older jax: one dict per device
         cost = cost[0] if cost else {}
     coll = hlo_lib.collective_stats(compiled.as_text())
     rec = {
-        "cell": f"paper-dse-fleet/b{B}xpop{pop_size}",
+        "cell": f"paper-dse-fleet/b{B}xpop{pop_size}/{backend}",
         "mesh": describe(mesh),
         "ok": True,
         "searches": B,
+        "backend": backend,
         "flops_per_device": float(cost.get("flops", 0.0)),
         "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
         "collective_bytes": coll.total_bytes,
@@ -330,7 +342,8 @@ def dryrun_paper_search_batched(
     if save:
         out = RESULT_DIR / describe(mesh)
         out.mkdir(parents=True, exist_ok=True)
-        with open(out / f"paper-dse-fleet__b{B}xpop{pop_size}.json", "w") as f:
+        tag = "" if backend == "jnp" else f"__{backend}"
+        with open(out / f"paper-dse-fleet__b{B}xpop{pop_size}{tag}.json", "w") as f:
             json.dump(rec, f, indent=1)
     return rec
 
@@ -347,6 +360,11 @@ def main(argv=None) -> int:
     )
     ap.add_argument("--all", action="store_true", help="run every cell")
     ap.add_argument("--paper", action="store_true", help="dry-run the DSE eval")
+    ap.add_argument(
+        "--backend", default="jnp", choices=["jnp", "pallas", "table"],
+        help="cost-model backend for the --search-mesh fleet dry-run "
+             "(table = factorized grid-table evaluator)",
+    )
     ap.add_argument("--no-save", action="store_true")
     ap.add_argument(
         "--no-correction", action="store_true",
@@ -357,9 +375,11 @@ def main(argv=None) -> int:
     if args.search_mesh:
         s, p = (int(v) for v in args.search_mesh.lower().split("x"))
         mesh = make_search_mesh(s, p)
-        rec = dryrun_paper_search_batched(mesh, save=not args.no_save)
+        rec = dryrun_paper_search_batched(
+            mesh, save=not args.no_save, backend=args.backend
+        )
         print(f"[paper-dse-fleet {describe(mesh)}] ok "
-              f"searches={rec['searches']} "
+              f"searches={rec['searches']} backend={rec['backend']} "
               f"flops/dev={rec['flops_per_device']:.3e} "
               f"coll={rec['collective_bytes']/1e6:.0f}MB")
         return 0

@@ -14,7 +14,10 @@ architectures exported as IMC workloads):
 (search, population) device mesh (on CPU-only hosts export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first; real
 multi-chip hosts need nothing).  Scores are unchanged — it only scales
-how many searches run in parallel.
+how many searches run in parallel.  ``--backend table`` evaluates through
+the factorized per-workload grid tables (``imc.tables``): throughput
+independent of layer count, which is what makes deep ``--lm-workloads``
+tables free at search time.
 """
 from __future__ import annotations
 
@@ -62,6 +65,12 @@ def main(argv=None) -> int:
     ap.add_argument("--mode", default="decode", choices=["decode", "prefill"])
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--objective", default="ela")
+    ap.add_argument(
+        "--backend", default="jnp", choices=["jnp", "pallas", "table"],
+        help="cost-model evaluation backend: dense jnp oracle, the Pallas "
+             "TPU kernel, or precomputed per-workload grid tables "
+             "(layer-depth-independent eval; see imc/tables.py)",
+    )
     ap.add_argument("--area", type=float, default=150.0)
     ap.add_argument("--pop", type=int, default=40)
     ap.add_argument("--gens", type=int, default=10)
@@ -95,7 +104,7 @@ def main(argv=None) -> int:
         keys, ws,
         objective=args.objective, area_constr=args.area,
         pop_size=args.pop, generations=args.gens,
-        mesh=mesh,
+        mesh=mesh, backend=args.backend,
     )
     dt_all = time.time() - t0
     n_evald = args.seeds * args.pop * (args.gens + 1)
@@ -123,7 +132,7 @@ def main(argv=None) -> int:
                 key2, ws,
                 objective=args.objective, area_constr=args.area,
                 pop_size=args.pop, generations=args.gens,
-                mesh=mesh,
+                mesh=mesh, backend=args.backend,
             )
             cross = {}
             for name, r in sep.items():

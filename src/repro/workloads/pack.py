@@ -3,6 +3,10 @@
 A set of W workloads becomes
     feats (W, L_max, 6) float32   and   mask (W, L_max) bool
 so the joint `max_w` reduction and the per-layer cost sums are tensor ops.
+``WorkloadSet.tables()`` memoizes the factorized cost-model statistics
+(``imc.tables``): the layer axis is reduced once per (set, tech) and the
+``backend="table"`` search path re-gathers from the cached tables forever
+after.
 """
 from __future__ import annotations
 
@@ -30,6 +34,19 @@ class WorkloadSet:
             feats=self.feats[np.array(idx)],
             mask=self.mask[np.array(idx)],
         )
+
+    def tables(self, tech=None):
+        """Per-workload sufficient statistics for the factorized cost model
+        (``imc.tables.WorkloadTables``), cached per tech on this set.  The
+        import is deferred because ``imc.cost`` imports this module."""
+        from repro.imc.tables import build_tables_arrays
+        from repro.imc.tech import TECH
+
+        tech = tech or TECH
+        cache = self.__dict__.setdefault("_tables_cache", {})
+        if tech not in cache:
+            cache[tech] = build_tables_arrays(self.feats, self.mask, tech)
+        return cache[tech]
 
 
 def pack_workloads(named_layers: Sequence[Tuple[str, List[Tuple]]]) -> WorkloadSet:

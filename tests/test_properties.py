@@ -86,6 +86,51 @@ def test_poly_mutation_in_bounds(seed):
     assert float(y.min()) >= 0.0 and float(y.max()) < 1.0
 
 
+# ------------------------------------------------- factorized-table properties
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 3),  # workloads
+    st.integers(1, 12),  # padded layer-table depth
+    st.floats(0.0, 1.0),  # per-layer mask density
+)
+@settings(max_examples=15, deadline=None)
+def test_table_backend_matches_dense_oracle(seed, w, l, density):
+    """imc.tables: for ANY random design population and ragged / partially-
+    or fully-masked workload set, the factorized table path reproduces the
+    dense (P, W, L) oracle: metrics allclose, fits/valid identical, and
+    identical objective scores (incl. the +inf infeasible pattern)."""
+    from repro.core.objectives import make_objective
+    from repro.imc.cost import evaluate_designs_arrays
+    from repro.imc.tables import build_tables_arrays, evaluate_genomes_tables
+
+    rng = np.random.default_rng(seed)
+    feats = np.zeros((w, l, 6), np.float32)
+    feats[..., 0] = rng.integers(1, 4096, (w, l))  # M
+    feats[..., 1] = rng.integers(1, 8192, (w, l))  # K
+    feats[..., 2] = rng.integers(1, 2048, (w, l))  # N
+    feats[..., 3] = rng.integers(1, 1 << 22, (w, l))  # A_in
+    feats[..., 4] = rng.integers(1, 1 << 22, (w, l))  # A_out
+    feats[..., 5] = rng.integers(1, 512, (w, l))  # groups
+    mask = rng.random((w, l)) < density
+    feats, mask = jnp.asarray(feats), jnp.asarray(mask)
+
+    g = space.random_genomes(jax.random.PRNGKey(seed), 64)
+    ref = evaluate_designs_arrays(space.decode(g), feats, mask)
+    tab = evaluate_genomes_tables(g, build_tables_arrays(feats, mask))
+
+    np.testing.assert_allclose(tab.energy_pj, ref.energy_pj, rtol=1e-5)
+    np.testing.assert_allclose(tab.latency_ns, ref.latency_ns, rtol=1e-5)
+    np.testing.assert_allclose(tab.area_mm2, ref.area_mm2, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(tab.fits), np.asarray(ref.fits))
+    np.testing.assert_array_equal(np.asarray(tab.valid), np.asarray(ref.valid))
+    obj = make_objective("ela", 150.0)
+    s_ref, s_tab = np.asarray(obj(ref)), np.asarray(obj(tab))
+    np.testing.assert_array_equal(np.isfinite(s_ref), np.isfinite(s_tab))
+    np.testing.assert_allclose(
+        s_tab[np.isfinite(s_ref)], s_ref[np.isfinite(s_ref)], rtol=1e-5
+    )
+
+
 # -------------------------------------------------- sharding-helper properties
 @given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2**31 - 1))
 @settings(max_examples=10, deadline=None)

@@ -113,6 +113,25 @@ def test_batched_search_sharded_parity_mixed_workload_sets(ws):
 
 
 @pytest.mark.multidevice
+@pytest.mark.parametrize("searches,pop", [(2, 4), (8, 1)])
+def test_batched_search_sharded_parity_table_backend(ws, searches, pop):
+    """The factorized-table ctx (imc.tables.WorkloadTables leaves) shards
+    over the search axis like any other batched leaf — bit-identical to
+    the unsharded table path."""
+    mesh = make_search_mesh(searches, pop)
+    B = 8
+    keys = jnp.stack([jax.random.PRNGKey(300 + i) for i in range(B)])
+    feats = jnp.broadcast_to(ws.feats[None], (B,) + ws.feats.shape)
+    mask = jnp.broadcast_to(ws.mask[None], (B,) + ws.mask.shape)
+    ref = batched_search(keys, feats, mask, pop_size=POP, generations=GENS,
+                         backend="table")
+    sh = batched_search(keys, feats, mask, pop_size=POP, generations=GENS,
+                        backend="table", mesh=mesh)
+    for r, s in zip(ref, sh):
+        _assert_results_equal(r, s)
+
+
+@pytest.mark.multidevice
 @pytest.mark.parametrize("searches,pop", [(4, 2), (2, 4)])
 def test_separate_search_sharded_parity(ws, searches, pop):
     mesh = make_search_mesh(searches, pop)

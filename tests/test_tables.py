@@ -1,0 +1,191 @@
+"""Factorized table cost model (imc/tables.py) vs the dense jnp oracle.
+
+The dense ``evaluate_designs_arrays`` path stays the source of truth; the
+table path must reproduce it: allclose metrics, identical fits/valid, the
+same GA trajectories, and identical top-design grid indices on the paper
+CNN set.  (Hypothesis variants live in test_properties.py.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import space
+from repro.core.search import batched_search, make_eval_fn, run_search
+from repro.imc.cost import evaluate_designs, evaluate_designs_arrays
+from repro.imc.tables import (
+    build_tables_arrays,
+    build_tables_batched,
+    evaluate_genomes_tables,
+)
+from repro.imc.tech import TECH
+from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+from repro.workloads.pack import WorkloadSet, pack_workloads
+
+POP, GENS = 16, 4
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+
+
+def _assert_result_close(tab, ref, rtol=1e-5):
+    np.testing.assert_allclose(tab.energy_pj, ref.energy_pj, rtol=rtol)
+    np.testing.assert_allclose(tab.latency_ns, ref.latency_ns, rtol=rtol)
+    np.testing.assert_allclose(tab.area_mm2, ref.area_mm2, rtol=rtol)
+    np.testing.assert_allclose(tab.util, ref.util, rtol=rtol)
+    np.testing.assert_array_equal(np.asarray(tab.fits), np.asarray(ref.fits))
+    np.testing.assert_array_equal(np.asarray(tab.valid), np.asarray(ref.valid))
+
+
+def test_table_eval_matches_dense(ws):
+    g = space.random_genomes(jax.random.PRNGKey(0), 512)
+    ref = evaluate_designs(space.decode(g), ws)
+    tab = evaluate_genomes_tables(g, ws.tables())
+    _assert_result_close(tab, ref)
+
+
+def test_table_eval_ragged_and_fully_masked():
+    """Padded (ragged) layer tables and an all-masked workload: the table
+    reduction must honor the mask exactly like the dense path."""
+    feats = np.zeros((3, 5, 6), np.float32)
+    feats[0, :2] = [(196, 1152, 128, 4096, 2048, 1), (49, 512, 64, 1024, 512, 2)]
+    feats[1, :5] = [(8, 64, 16, 128, 128, 1)] * 5
+    # workload 2: mask entirely False (feats left zero)
+    mask = np.zeros((3, 5), bool)
+    mask[0, :2] = True
+    mask[1, :5] = True
+    feats, mask = jnp.asarray(feats), jnp.asarray(mask)
+
+    g = space.random_genomes(jax.random.PRNGKey(1), 128)
+    ref = evaluate_designs_arrays(space.decode(g), feats, mask)
+    tab = evaluate_genomes_tables(g, build_tables_arrays(feats, mask))
+    _assert_result_close(tab, ref)
+    # fully-masked workload: no demand, fits everywhere, zero latency
+    assert bool(np.asarray(tab.fits)[:, 2].all())
+    np.testing.assert_array_equal(np.asarray(tab.latency_ns)[:, 2], 0.0)
+
+
+def test_table_eval_deep_lm_workload():
+    """Layer-depth independence must not cost accuracy: parity on a deep
+    LM layer table (the workloads the table path makes free)."""
+    from repro.configs.base import get_config
+    from repro.workloads.lm import lm_workload
+
+    cfg = get_config("llama3.2-1b")
+    ws = pack_workloads([("lm", lm_workload(cfg, mode="decode"))])
+    g = space.random_genomes(jax.random.PRNGKey(2), 128)
+    ref = evaluate_designs(space.decode(g), ws)
+    tab = evaluate_genomes_tables(g, ws.tables())
+    _assert_result_close(tab, ref)
+
+
+def test_build_tables_batched_matches_single(ws):
+    B = 3
+    feats = jnp.broadcast_to(ws.feats[None], (B,) + ws.feats.shape)
+    mask = jnp.broadcast_to(ws.mask[None], (B,) + ws.mask.shape)
+    batched = build_tables_batched(feats, mask)
+    single = build_tables_arrays(ws.feats, ws.mask)
+    for bt, st in zip(batched, single):
+        assert bt.shape == (B,) + st.shape
+        for b in range(B):
+            np.testing.assert_array_equal(np.asarray(bt[b]), np.asarray(st))
+
+
+def test_workloadset_tables_cached(ws):
+    t1 = ws.tables()
+    t2 = ws.tables()
+    assert t1 is t2  # memoized per tech
+    tech2 = TECH._replace(weight_bits=4)
+    t3 = ws.tables(tech2)
+    assert t3 is not t1
+    assert t3 is ws.tables(tech2)
+
+
+def test_make_eval_fn_table_matches_jnp(ws):
+    g = space.random_genomes(jax.random.PRNGKey(3), 256)
+    s_ref = np.asarray(make_eval_fn(ws, "ela", 150.0, backend="jnp")(g))
+    s_tab = np.asarray(make_eval_fn(ws, "ela", 150.0, backend="table")(g))
+    finite = np.isfinite(s_ref)
+    np.testing.assert_array_equal(finite, np.isfinite(s_tab))
+    np.testing.assert_allclose(s_tab[finite], s_ref[finite], rtol=1e-5)
+
+
+def test_run_search_table_backend(ws):
+    """Sequential driver: the table backend follows the same GA trajectory
+    (scores allclose per generation) as the dense oracle."""
+    r_ref = run_search(jax.random.PRNGKey(0), ws, pop_size=POP,
+                       generations=GENS, backend="jnp")
+    r_tab = run_search(jax.random.PRNGKey(0), ws, pop_size=POP,
+                       generations=GENS, backend="table")
+    np.testing.assert_allclose(
+        np.asarray(r_tab.ga.scores), np.asarray(r_ref.ga.scores), rtol=1e-5
+    )
+
+
+def test_batched_search_table_top_designs_match(ws):
+    """Acceptance: batched table-backend searches on the four paper CNNs
+    follow identical trajectories and pick identical top designs (top-1
+    grid indices equal; top-k equal as a set — within-top-k order of
+    sub-1e-6-relative near-ties may differ)."""
+    B, pop, gens = 3, 32, 6  # big enough that every seed finds feasibles
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+    feats = jnp.broadcast_to(ws.feats[None], (B,) + ws.feats.shape)
+    mask = jnp.broadcast_to(ws.mask[None], (B,) + ws.mask.shape)
+    ref = batched_search(keys, feats, mask, pop_size=pop, generations=gens)
+    tab = batched_search(keys, feats, mask, pop_size=pop, generations=gens,
+                         backend="table")
+    for b in range(B):
+        np.testing.assert_allclose(
+            np.asarray(tab[b].ga.scores), np.asarray(ref[b].ga.scores),
+            rtol=1e-5,
+        )
+        i_ref = space.decode_indices_np(ref[b].top_genomes)
+        i_tab = space.decode_indices_np(tab[b].top_genomes)
+        assert len(i_ref) and len(i_tab)
+        np.testing.assert_array_equal(i_tab[0], i_ref[0])  # same best design
+        assert {tuple(r) for r in i_tab} == {tuple(r) for r in i_ref}
+        np.testing.assert_allclose(
+            tab[b].top_scores[0], ref[b].top_scores[0], rtol=1e-5
+        )
+
+
+def test_batched_search_table_obj_weights(ws):
+    """Weighted-objective ctx carries tables + weights."""
+    B = 2
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+    feats = jnp.broadcast_to(ws.feats[None], (B,) + ws.feats.shape)
+    mask = jnp.broadcast_to(ws.mask[None], (B,) + ws.mask.shape)
+    w = jnp.tile(jnp.asarray([1.0, 1.0, 1.0])[None], (B, 1))
+    plain = batched_search(keys, feats, mask, pop_size=POP, generations=GENS,
+                           backend="table")
+    weighted = batched_search(keys, feats, mask, pop_size=POP,
+                              generations=GENS, backend="table", obj_weights=w)
+    for b in range(B):
+        np.testing.assert_allclose(
+            np.asarray(weighted[b].ga.scores), np.asarray(plain[b].ga.scores),
+            rtol=1e-5,
+        )
+
+
+def test_top_unique_vectorized_semantics():
+    """The np.unique fast path keeps the old loop's contract: best-first,
+    unique in grid-index space, truncated at non-finite scores."""
+    from repro.core.search import _top_unique
+
+    idx = np.array([[2, 1, 0, 3, 4, 0, 1, 2, 5],
+                    [0, 0, 0, 0, 0, 0, 0, 0, 0]])
+    g_a = space.genome_from_indices(idx[[0]])[0]
+    g_b = space.genome_from_indices(idx[[1]])[0]
+    genomes = np.stack([g_a, g_b, g_a, g_b], axis=0).astype(np.float32)
+    scores = np.array([3.0, 1.0, 2.0, np.inf], np.float32)
+    top_g, top_s = _top_unique(genomes, scores, 10)
+    # duplicates of a collapse to its best occurrence; inf dropped
+    np.testing.assert_array_equal(top_s, [1.0, 2.0])
+    np.testing.assert_array_equal(
+        space.decode_indices_np(top_g), idx[[1, 0]]
+    )
+    # k truncation
+    _, s1 = _top_unique(genomes, scores, 1)
+    np.testing.assert_array_equal(s1, [1.0])

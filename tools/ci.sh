@@ -3,6 +3,10 @@
 #   bash tools/ci.sh               # tier-1 on the host's real device set
 #   bash tools/ci.sh multidevice   # tier-1 + sharding tests + sharded bench
 #                                  # row on a fake 8-device host
+#   bash tools/ci.sh bench-smoke   # tiny search-throughput run per backend;
+#                                  # appends the 'table' row to
+#                                  # experiments/search_throughput.json so
+#                                  # the perf trajectory is recorded per PR
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -13,6 +17,9 @@ if [[ "${1:-}" == "multidevice" ]]; then
   export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
   python -m pytest -x -q
   python -m benchmarks.bench_search_throughput --quick --mesh 2x4
+elif [[ "${1:-}" == "bench-smoke" ]]; then
+  python -m benchmarks.bench_search_throughput --quick
+  python -m benchmarks.bench_search_throughput --quick --backend table
 else
   python -m pytest -x -q
   python -m benchmarks.run --quick
