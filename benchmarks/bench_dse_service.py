@@ -1,0 +1,153 @@
+"""DSE-service throughput — the requests/s row of the perf trajectory.
+
+Drains N heterogeneous search requests (mixed workload subsets x
+objective kinds x seeds on the ``table`` backend — ``serve.dse.
+paper_request_mix``) through the continuous-batching ``DSEService`` and
+records:
+
+  * cold_s / warm_s        — first drain (trace + XLA compile of the
+                             seeding + GA programs) vs best-of-N cached
+                             drains (the steady-state service number),
+  * requests_per_s         — warm requests/s (each request = a full
+                             P x (G+1) GA search),
+  * designs_per_s          — the same in designs evaluated/s,
+  * launches / programs    — XLA launches in one drain, and how many NEW
+                             seeding/GA programs the drain compiled (the
+                             acceptance bound is <= 4; steady state is 0).
+
+``--smoke`` is the CI serve-smoke leg: ~32 mixed requests at a tiny
+operating point, asserting every result arrives with a finite best score.
+``python -m benchmarks.bench_dse_service`` appends the ``service`` row of
+``experiments/search_throughput.json`` (see benchmarks/README.md for the
+methodology).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+PAPER_S_PER_DESIGN = 36.0
+POP, GENS = 40, 10
+
+
+def _program_cache_sizes() -> int:
+    """Compiled-program count of the two jits a drain launches (seeding +
+    batched GA) — the 'programs' the acceptance criterion bounds."""
+    from repro.core import engine, ga
+
+    return ga._run_ga_batched_jit._cache_size() + engine._seed_batched_jit._cache_size()
+
+
+def run(quick: bool = False, verbose: bool = True, mesh=None,
+        backend: str = "table", n_requests: int = None) -> dict:
+    from repro.serve.dse import DSEService, paper_request_mix
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    n = n_requests or (64 if quick else 256)
+    warm_reps = 2 if quick else 3
+    per_search = POP * (GENS + 1)
+
+    def drain(seed0: int) -> "DSEService":
+        svc = DSEService(mesh=mesh)
+        svc.submit_all(paper_request_mix(
+            ws, n, backend=backend, pop_size=POP, generations=GENS,
+            seed0=seed0,
+        ))
+        res = svc.drain()
+        assert len(res) == n
+        return svc
+
+    p0 = _program_cache_sizes()
+    t0 = time.time()
+    svc = drain(0)
+    cold = time.time() - t0
+    programs = _program_cache_sizes() - p0
+    warm = float("inf")
+    for rep in range(warm_reps):
+        t0 = time.time()
+        svc = drain(1000 * (rep + 1))
+        warm = min(warm, time.time() - t0)
+    out = {
+        "requests": n, "pop": POP, "gens": GENS, "backend": backend,
+        "slots": svc.engine.max_slots, "launches": svc.stats.launches,
+        "programs_compiled_cold": programs,
+        "warm_reps": warm_reps,
+        "cold_s": cold,  # includes trace + XLA compile
+        "warm_s": warm,  # cached programs: the steady-state number
+        "requests_per_s": n / warm,
+        "designs_per_s": n * per_search / warm,
+        "speedup_vs_paper": (n * per_search / warm) * PAPER_S_PER_DESIGN,
+        "paper_s_per_design": PAPER_S_PER_DESIGN,
+    }
+    if verbose:
+        print(f"[dse-service] {n} mixed requests: cold {cold:.2f}s "
+              f"({programs} programs), warm {warm:.2f}s -> "
+              f"{n/warm:.1f} req/s, {n*per_search/warm:.0f} designs/s "
+              f"({svc.stats.launches} launches/drain)")
+    return out
+
+
+def smoke(n: int = 32) -> int:
+    """CI serve-smoke: submit n mixed requests at a tiny operating point,
+    drain, assert every result is present with a finite best score."""
+    import numpy as np
+
+    from repro.serve.dse import DSEService, paper_request_mix
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    ws = pack_workloads([(nm, cnn_workload(nm)) for nm in PAPER_WORKLOADS])
+    svc = DSEService()
+    # the paper's P=40 population: seeded designs all fit their largest
+    # workload, and at P=40 every request reliably finds a feasible
+    # (area-satisfying) design within a few generations
+    rids = svc.submit_all(paper_request_mix(
+        ws, n, backend="table", pop_size=40, generations=6,
+    ))
+    results = svc.drain()
+    missing = [r for r in rids if r not in results]
+    assert not missing, f"requests never completed: {missing}"
+    bad = [
+        r for r in rids
+        if not (len(results[r].top_scores)
+                and np.isfinite(results[r].top_scores[0]))
+    ]
+    assert not bad, f"requests with no finite best score: {bad}"
+    print(f"[dse-service] smoke: {n}/{n} mixed requests drained, "
+          f"all finite ({svc.stats.launches} launches)")
+    return 0
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from benchmarks.run import prepare_search_mesh, write_search_throughput
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="64 requests instead of 256")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI serve-smoke: drain ~32 tiny mixed requests, "
+                         "assert all present + finite; records nothing")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument(
+        "--mesh", nargs="?", const="auto", default=None, metavar="SEARCHxPOP",
+        help="shard the service's launches over a (search, population) mesh "
+             "(layout proof on fake devices; row not recorded)",
+    )
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke(args.requests or 32)
+    mesh = prepare_search_mesh(args.mesh) if args.mesh else None
+    res = run(quick=args.quick, mesh=mesh, n_requests=args.requests)
+    if mesh is not None:
+        print("[dse-service] mesh run not recorded (fake-device layout "
+              "proof; the tracked service row is the single-host number)")
+        return 0
+    write_search_throughput(res, row="service")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -46,7 +46,7 @@ def prepare_search_mesh(spec: str):
 
 
 # named rows kept alongside the top-level (dense, unsharded) trajectory
-EXTRA_ROWS = ("sharded", "table")
+EXTRA_ROWS = ("sharded", "table", "service")
 
 
 def write_search_throughput(res: dict, *, row: str = None) -> Path:
@@ -78,6 +78,7 @@ def main(argv=None) -> int:
     exp_dir()
 
     from benchmarks import (
+        bench_dse_service,
         bench_generalization,
         bench_joint_vs_separate,
         bench_kernels,
@@ -103,6 +104,10 @@ def main(argv=None) -> int:
     print("\n== search throughput (factorized table backend) ==")
     sthru_t = bench_search_throughput.run(quick=args.quick, backend="table")
     write_search_throughput(sthru_t, row="table")
+
+    print("\n== DSE service (continuous batching of mixed requests) ==")
+    svc = bench_dse_service.run(quick=args.quick)
+    write_search_throughput(svc, row="service")
 
     print("\n== Fig. 2: joint vs separate ==")
     fig2 = bench_joint_vs_separate.run(seeds=1 if args.quick else 5)

@@ -3,10 +3,17 @@
 * ``space``      — the ~1.9e7-config hardware search space + genome codec
 * ``ga``         — SBX + polynomial-mutation GA as one XLA program
 * ``objectives`` — f(E_w, L_w, A) s.t. A <= A_constr families
-* ``search``     — joint / separate drivers, seeding, cross-rescoring
+* ``engine``     — SearchRequest -> plan -> execute DSE engine (the
+                   implementation behind every search driver)
+* ``search``     — joint / separate driver wrappers, cross-rescoring
 * ``distributed``— population evaluation sharded over the mesh
 """
 from repro.core import space  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    SearchEngine,
+    SearchRequest,
+    plan_batch,
+)
 from repro.core.ga import GAResult, run_ga, run_ga_batched  # noqa: F401
 from repro.core.objectives import (  # noqa: F401
     OBJECTIVES,

@@ -32,8 +32,12 @@ Two kinds of entry points:
 
 Meshes without a ``search`` (or without a ``data``/``pod``) axis degrade to
 replication along the missing dimension, so every helper also accepts the
-historical single-GA meshes.  Remaining open item: real-TPU timings
-(ROADMAP.md) — this container runs Pallas in interpret mode.
+historical single-GA meshes.  The DSE engine (``core.engine``) places its
+slot-packed launches through the same ``place_batched`` path —
+``sharded_search_engine`` / ``serve.dse.DSEService(mesh=...)`` put the
+whole request->plan->execute service on the mesh.  Remaining open item:
+real-TPU timings (ROADMAP.md) — this container runs Pallas in interpret
+mode.
 """
 from __future__ import annotations
 
@@ -164,7 +168,7 @@ def sharded_batched_eval_fn(
     paths.  Used by the fleet dry-run (launch/dryrun.py --search-mesh
     [--backend table]) and standalone batched rescoring.
     """
-    from repro.core.search import _ctx_eval  # deferred: search imports us
+    from repro.core.engine import _ctx_eval  # deferred: engine places via us
 
     base = _ctx_eval(objective, float(area_constr), tech, backend)
 
@@ -222,3 +226,13 @@ def sharded_seed_population_batched(mesh: Mesh, keys, feats, mask, pop_size, **k
     from repro.core import search
 
     return search.seed_population_batched(keys, feats, mask, pop_size, mesh=mesh, **kw)
+
+
+def sharded_search_engine(mesh: Mesh, **kw) -> "SearchEngine":
+    """A ``core.engine.SearchEngine`` whose every plan launch commits its
+    slot-packed inputs to this (search, population) mesh — the DSE-service
+    stack (``serve.dse.DSEService(mesh=...)``) on a pod.  Scores stay
+    bit-identical to the meshless engine (tests/test_engine.py)."""
+    from repro.core.engine import SearchEngine
+
+    return SearchEngine(mesh=mesh, **kw)

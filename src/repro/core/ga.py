@@ -70,6 +70,40 @@ class _IgnoreCtx:
         return isinstance(other, _IgnoreCtx) and self.fn == other.fn
 
 
+def _survivor_indices(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Indices of the k lowest scores, best-first, replacing the float
+    ``jnp.argsort(alls)[:P]`` of the survival step (the GA's post-PR-3
+    hot spot: survival touches 2P candidates per generation, all through
+    a stability-tracking float comparator).
+
+    Implementation: one ``lax.sort`` over an integer key pair — the
+    float32 score mapped to its total-order int32 (negatives: descending
+    magnitude; both zero signs collapse to 0, matching comparison sorts),
+    tie-broken by the candidate index.  Semantics are EXACTLY stable
+    ascending argsort, asserted adversarially (duplicates, +inf
+    infeasibles, mixed zero signs) in tests/test_search_batched.py.
+
+    Why not ``lax.top_k`` on the negated scores: top_k breaks ties by
+    index in a single shard, but a GSPMD-sharded population merges
+    per-shard top-k lists and the cross-shard tie order (every infeasible
+    candidate scores exactly +inf, so ties are the norm) diverges from
+    the unsharded program — which would break the stack's bit-identical
+    sharded-parity guarantee (tests/test_search_sharded.py).  A
+    collision-free int64 composite would fix that but int64 is
+    unavailable without global x64.  The unique integer key pair keeps
+    the sort shard-stable, branchless, and stability-free instead."""
+    n = scores.shape[-1]
+    bits = jax.lax.bitcast_convert_type(scores.astype(jnp.float32), jnp.int32)
+    order = jnp.where(
+        bits < 0,
+        -(bits & jnp.int32(0x7FFFFFFF)),  # negative floats: -magnitude
+        bits,
+    )
+    iota = jax.lax.iota(jnp.int32, n)
+    _, idx = jax.lax.sort((order, iota), num_keys=2, is_stable=False)
+    return idx[:k]
+
+
 def _tournament(key, scores: jnp.ndarray, n: int) -> jnp.ndarray:
     """Binary tournament: n winners (indices)."""
     P = scores.shape[0]
@@ -136,7 +170,7 @@ def _ga_core(
         # (mu + lambda) elitist survival
         allg = jnp.concatenate([pop, children], axis=0)
         alls = jnp.concatenate([scores, child_scores], axis=0)
-        order = jnp.argsort(alls)[:P]
+        order = _survivor_indices(alls, P)
         new_pop, new_scores = allg[order], alls[order]
         return (new_pop, new_scores), (children, child_scores)
 

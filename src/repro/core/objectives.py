@@ -15,6 +15,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict
 
+import jax
 import jax.numpy as jnp
 
 from repro.imc.cost import EvalResult
@@ -61,6 +62,49 @@ OBJECTIVE_WEIGHTS: Dict[str, tuple] = {
     "e": (1.0, 0.0, 0.0),
     "l": (0.0, 1.0, 0.0),
 }
+
+# kind -> traced selector index for make_indexed_objective
+OBJECTIVE_INDEX: Dict[str, int] = {k: i for i, k in enumerate(OBJECTIVES)}
+
+
+def make_indexed_objective() -> Callable:
+    """Objective selected by a *traced* kind index and area constraint.
+
+    Every branch computes exactly the expression of the matching
+    ``make_objective`` kind (same products, same association), so scores
+    are BIT-IDENTICAL to the static string path per element — unlike the
+    exponent-weighted form, whose ``x ** 1.0`` need not be bitwise ``x``.
+    This is the objective the DSE engine (``core.engine``) packs
+    heterogeneous requests with: one XLA program covers every kind in
+    ``OBJECTIVES`` *and* every area constraint, because both enter as
+    per-element data (a () int32 and a () float32 ctx leaf under vmap)."""
+
+    def score(r: EvalResult, kind_index: jnp.ndarray,
+              area_constr: jnp.ndarray) -> jnp.ndarray:
+        e = _joint(r.energy_pj)
+        l = _joint(r.latency_ns)
+        a = r.area_mm2
+        # Stack the four kind expressions (each computed exactly as its
+        # static ``make_objective`` branch) on a TRAILING axis and gather
+        # by the traced index.  The select form matters empirically:
+        # elementwise selects (where-chains, masked-factor products,
+        # ``select_n``) let XLA fuse the objective into the in-scan
+        # cost-model graph, whose contraction choices shift with the
+        # vmapped batch size — costing the packed program its bit-parity
+        # with the per-request one — while a LEADING-axis stack gathers
+        # across the population dim, so GSPMD reshards the upstream
+        # reductions — costing the sharded run its bit-parity with the
+        # unsharded one.  Trailing-axis stack + gather keeps the branch
+        # values as standalone buffers (codegen pinned across batch
+        # sizes) without touching the population dim's partitioning
+        # (tests/test_engine.py + tests/test_search_sharded.py cover the
+        # two directions).
+        branches = jnp.stack([e * l * a, e * l, e, l], axis=-1)  # OBJECTIVES order
+        s = branches[..., kind_index]
+        feasible = r.fits.all(axis=-1) & r.valid & (a <= area_constr)
+        return jnp.where(feasible, s, INF)
+
+    return score
 
 
 def make_weighted_objective(area_constr_mm2: float = 150.0) -> Callable:

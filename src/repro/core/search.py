@@ -1,340 +1,87 @@
 """Joint / separate hardware-workload search drivers (paper Sec. III-A, IV).
 
-``joint_search``         — one GA over the full workload set (the paper's
-                           method): objective reduces metrics with max over
-                           workloads.
+Since the engine refactor every driver here is a THIN wrapper: it builds
+``core.engine.SearchRequest``s and hands them to the shared
+``core.engine.SearchEngine``, which plans (groups by traced-shape
+signature, slot-packs) and executes them as cached one-jit vmapped GA
+programs.  The layering:
+
+    serve/dse.py        continuous-batching queue over heterogeneous
+                        requests (submit / step / drain / stream)
+    core/engine.py      SearchRequest -> plan_batch -> SearchEngine.execute
+                        (ctx/seeding/finalize plumbing lives HERE, once)
+    core/ga.py          the one-jit, donated, vmapped GA
+    imc/{cost,tables}   dense oracle + factorized table backends
+
+Drivers (public API unchanged from the pre-engine stack):
+
+``joint_search``/``run_search`` — one GA over the full workload set (the
+                           paper's method): objective reduces metrics with
+                           max over workloads.  One single-slot plan.
 ``separate_search``      — the baseline: one GA per single workload.  By
-                           default all W GAs run as ONE vmapped XLA program
-                           (``batched=False`` keeps the sequential reference
-                           path; both produce identical scores).
-``batched_search``       — the general batched driver: B independent GAs
-                           (any mix of workload sets / seeds / objective
-                           weights) vmapped into a single jit.
+                           default all W GAs run as ONE plan
+                           (``batched=False`` keeps the sequential
+                           reference path; both produce identical scores).
+``batched_search``       — B independent GAs (any mix of workload sets /
+                           seeds / objective weights) as one plan.
 ``joint_search_batched`` — multi-seed joint search on top of it.
 ``rescore_designs``      — re-evaluate any designs on any workload set or
-                           objective (the paper's "failed designs" analysis).
-``seed_population``      — initial population sampling with the paper's rule
-                           (configs that cannot fit the *largest* workload
-                           are discarded) as a jitted ``lax.while_loop``
-                           rejection sampler — no per-round host sync.
+                           objective (the paper's "failed designs"
+                           analysis).
+``seed_population``      — the paper's seeding rule (configs that cannot
+                           fit the *largest* workload are discarded) as a
+                           jitted rejection sampler (lives in the engine).
 
 Everything workload-dependent enters the jitted programs as traced array
-arguments, and the evaluation callbacks are cached per (objective, area,
-tech, backend) — repeated searches of the same shape never retrace.  The
-batched drivers take ``mesh=`` (``launch.mesh.make_search_mesh``) to lay
-the B independent GAs out over a 2-D (search, population) device mesh —
-see ``core.distributed`` — with bit-identical scores.
+arguments (string objectives become a traced kind index + area through
+``objectives.make_indexed_objective``), and the evaluation callbacks are
+cached per (objective-mode, tech, backend) — repeated searches of the
+same shape never retrace, and heterogeneous batches (mixed workload
+subsets, objectives, areas, seeds) share ONE program.  The batched
+drivers take ``mesh=`` (``launch.mesh.make_search_mesh``) to lay the B
+independent GAs out over a 2-D (search, population) device mesh — see
+``core.distributed`` — with bit-identical scores.
 
 Three evaluation backends (``backend=``): ``"jnp"`` (dense (P, W, L)
 oracle), ``"pallas"`` (the imc_eval TPU kernel), and ``"table"`` — the
 factorized cost model (``imc.tables``): the layer axis is reduced once per
 workload set into grid tables that travel through the traced ``ctx``, and
 every per-generation evaluation is O(W) gathers per design, independent of
-workload depth L.  Scores are allclose across backends and the table path
-picks identical top designs on the paper CNN set (tests/test_tables.py).
-Measured on this container (benchmarks/bench_joint_vs_separate, 5 seeds =
-5 joint + 20 separate GAs): 83 s sequential -> 15 s batched cold
-(5.5x, including XLA compile of the two programs) -> 2 s with a warm
-program cache (~40x); a warm P=40 x G=10 joint search itself runs at
-~14k designs evaluated/s (experiments/search_throughput.json).
+workload depth L.  Because the table ctx is layer-free, the engine packs
+requests over DIFFERENT workload sets into one program (zero-padded table
+rows are exactly neutral under the max-reduction) — the basis of the DSE
+service (``serve.dse``), which drains hundreds of heterogeneous requests
+through a handful of compiled programs (tests/test_engine.py asserts
+bit-identical parity with per-request ``run_search``).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import lru_cache, partial
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import space
-from repro.core.ga import GAResult, run_ga, run_ga_batched
-from repro.core.objectives import (
-    OBJECTIVE_WEIGHTS,
-    make_objective,
-    make_weighted_objective,
+from repro.core.engine import (  # noqa: F401 — re-exported public/test API
+    BACKENDS,
+    SearchRequest,
+    SearchResult,
+    _ctx_eval,
+    _eval_ctx,
+    _finalize,
+    _top_unique,
+    _workload_weights,
+    default_engine,
+    largest_workload_index,
+    make_eval_fn,
+    seed_population,
+    seed_population_batched,
 )
-from repro.imc.cost import (
-    DesignArrays,
-    EvalResult,
-    evaluate_designs,
-    evaluate_designs_arrays,
-)
+from repro.core.objectives import make_objective
+from repro.imc.cost import EvalResult, evaluate_designs
 from repro.imc.tech import TECH, TechParams
 from repro.workloads.pack import WorkloadSet
-
-
-@dataclasses.dataclass
-class SearchResult:
-    workload_names: Tuple[str, ...]
-    objective: str
-    ga: GAResult
-    top_designs: List[Dict[str, float]]  # decoded, deduped, best-first
-    top_scores: np.ndarray
-    top_genomes: np.ndarray
-    convergence: np.ndarray  # best-so-far score per generation
-
-
-# --------------------------------------------------------- eval callbacks
-BACKENDS = ("jnp", "pallas", "table")
-
-
-@lru_cache(maxsize=None)
-def _ctx_eval(
-    objective: Optional[str], area_constr: float, tech: TechParams, backend: str
-) -> Callable:
-    """Cached ``eval_fn(genomes, ctx)`` with ``ctx = (feats (W, L, 6),
-    mask (W, L))`` — or, for ``backend="table"``, ``ctx = (tables,)`` with
-    ``tables`` an ``imc.tables.WorkloadTables`` pytree (``_eval_ctx`` builds
-    the right one).  When ``objective`` is ``None`` a trailing ``weights
-    (3,)`` leaf selects the exponent-weighted objective.  The cache (plus
-    workload tensors/tables being traced, not closed over) is what keeps
-    the GA jit from retracing across seeds and workload sets."""
-    if backend not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
-    obj = (
-        make_weighted_objective(area_constr)
-        if objective is None
-        else make_objective(objective, area_constr)
-    )
-
-    if backend == "table":
-        from repro.imc.tables import evaluate_genomes_tables
-
-        def ev(genomes, ctx):
-            return evaluate_genomes_tables(genomes, ctx[0], tech)
-
-    elif backend == "pallas":
-        from repro.kernels.imc_eval.ops import evaluate_designs_kernel_arrays
-
-        def ev(genomes, ctx):
-            return evaluate_designs_kernel_arrays(
-                space.decode(genomes), ctx[0], ctx[1], tech
-            )
-
-    else:
-
-        def ev(genomes, ctx):
-            return evaluate_designs_arrays(space.decode(genomes), ctx[0], ctx[1], tech)
-
-    def eval_fn(genomes: jnp.ndarray, ctx) -> jnp.ndarray:
-        r = ev(genomes, ctx)
-        return obj(r, ctx[-1]) if objective is None else obj(r)
-
-    return eval_fn
-
-
-def _eval_ctx(
-    feats: jnp.ndarray,
-    mask: jnp.ndarray,
-    tech: TechParams,
-    backend: str,
-    *,
-    batched: bool = False,
-) -> Tuple:
-    """The workload half of an eval ``ctx`` for ``backend``: the raw
-    ``(feats, mask)`` tensors, or — for the table backend — the factorized
-    ``(tables,)`` statistics, reduced over the layer axis here, ONCE, so
-    the per-generation evaluation never sees L again."""
-    if backend != "table":
-        return (feats, mask)
-    from repro.imc.tables import build_tables_arrays, build_tables_batched
-
-    build = build_tables_batched if batched else build_tables_arrays
-    return (build(feats, mask, tech),)
-
-
-def make_eval_fn(
-    ws: WorkloadSet,
-    objective: str,
-    area_constr: float,
-    tech: TechParams = TECH,
-    *,
-    backend: str = "jnp",
-) -> Callable[[jnp.ndarray], jnp.ndarray]:
-    """backend: "jnp" (portable), "pallas" (the imc_eval TPU kernel;
-    interpret-mode off-TPU — numerically identical, see tests) or "table"
-    (factorized per-workload grid tables: O(W) gathers per design, no
-    layer axis — allclose to "jnp", see tests/test_tables.py)."""
-    fn = _ctx_eval(objective, float(area_constr), tech, backend)
-    ctx = (ws.tables(tech),) if backend == "table" else (ws.feats, ws.mask)
-
-    def eval_fn(genomes: jnp.ndarray) -> jnp.ndarray:
-        return fn(genomes, ctx)
-
-    return eval_fn
-
-
-def _workload_weights(feats: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
-    """Crossbar-demand proxy per workload (total weight count K * N * groups);
-    the single definition of "largest" shared by sequential and batched
-    seeding so their largest-workload picks can never diverge."""
-    return (feats[..., 1] * feats[..., 2] * feats[..., 5] * mask).sum(-1)
-
-
-def largest_workload_index(ws: WorkloadSet) -> int:
-    """Largest = most crossbar demand at a reference design (most weights)."""
-    return int(jnp.argmax(_workload_weights(ws.feats, ws.mask)))
-
-
-# ----------------------------------------------------------------- seeding
-def _seed_rounds(key, feats, mask, pop_size, oversample, max_rounds, tech):
-    """Jit-traceable rejection sampler against ONE workload (feats (L, 6)).
-
-    Each round draws ``pop_size * oversample`` candidates, keeps those that
-    fit and are V/f-valid, and scatters them into the next free pool slots;
-    a ``lax.while_loop`` repeats until the pool is full or ``max_rounds``
-    is hit — the host only syncs once, on the final (pool, count)."""
-    n_cand = pop_size * oversample
-
-    def cond(st):
-        _, _, count, rnd = st
-        return (count < pop_size) & (rnd < max_rounds)
-
-    def body(st):
-        key, pool, count, rnd = st
-        key, k = jax.random.split(key)
-        cand = space.random_genomes(k, n_cand)
-        r = evaluate_designs_arrays(space.decode(cand), feats[None], mask[None], tech)
-        ok = r.fits[:, 0] & r.valid
-        pos = count + jnp.cumsum(ok) - 1
-        idx = jnp.where(ok & (pos < pop_size), pos, pop_size)  # OOB -> dropped
-        pool = pool.at[idx].set(cand, mode="drop")
-        count = jnp.minimum(count + ok.sum(), pop_size)
-        return key, pool, count, rnd + jnp.int32(1)
-
-    pool0 = jnp.zeros((pop_size, space.N_GENES), jnp.float32)
-    st = (key, pool0, jnp.int32(0), jnp.int32(0))
-    _, pool, count, _ = jax.lax.while_loop(cond, body, st)
-    return pool, count
-
-
-_SEED_STATICS = ("pop_size", "oversample", "max_rounds", "tech")
-
-
-@partial(jax.jit, static_argnames=_SEED_STATICS)
-def _seed_jit(key, feats, mask, *, pop_size, oversample, max_rounds, tech):
-    return _seed_rounds(key, feats, mask, pop_size, oversample, max_rounds, tech)
-
-
-@partial(jax.jit, static_argnames=_SEED_STATICS)
-def _seed_batched_jit(keys, feats, mask, *, pop_size, oversample, max_rounds, tech):
-    """keys (B, 2), feats (B, W, L, 6), mask (B, W, L).  Each element's
-    largest workload is picked as a TRACED argmax+gather inside the
-    program — no host-side device sync before the seeding launch."""
-
-    def one(k, ft, mk):
-        li = jnp.argmax(_workload_weights(ft, mk))
-        return _seed_rounds(k, ft[li], mk[li], pop_size, oversample, max_rounds, tech)
-
-    return jax.vmap(one)(keys, feats, mask)
-
-
-def seed_population(
-    key: jax.Array,
-    ws: WorkloadSet,
-    pop_size: int,
-    *,
-    tech: TechParams = TECH,
-    oversample: int = 64,
-    max_rounds: int = 8,
-) -> jnp.ndarray:
-    """Random init; designs failing the largest workload (or V/f-invalid)
-    are discarded (paper Sec. III-C).  One jitted while-loop program."""
-    wi = largest_workload_index(ws)
-    pool, count = _seed_jit(
-        key, ws.feats[wi], ws.mask[wi],
-        pop_size=int(pop_size), oversample=int(oversample),
-        max_rounds=int(max_rounds), tech=tech,
-    )
-    if int(count) < pop_size:
-        raise RuntimeError(
-            f"could not seed {pop_size} valid designs ({int(count)} found); "
-            "largest workload may not fit anywhere in the search space"
-        )
-    return pool
-
-
-def seed_population_batched(
-    keys: jnp.ndarray,
-    feats: jnp.ndarray,
-    mask: jnp.ndarray,
-    pop_size: int,
-    *,
-    tech: TechParams = TECH,
-    oversample: int = 64,
-    max_rounds: int = 8,
-    mesh=None,
-) -> jnp.ndarray:
-    """Per-batch-element seeding: keys (B, 2), feats (B, W, L, 6), mask
-    (B, W, L) -> pools (B, pop_size, n).  Each element rejects against its
-    own largest workload — selected by a traced argmax INSIDE the jit, so
-    nothing blocks on device between the call and the seeding launch — all
-    under one vmapped while-loop.  With ``mesh`` (a
-    ``launch.mesh.make_search_mesh`` layout) the batch axis is committed
-    to the ``search`` mesh axis before the launch, so each mesh slice seeds
-    its own searches."""
-    if mesh is not None:
-        from repro.core.distributed import place_batched
-
-        keys = place_batched(mesh, keys)
-        feats = place_batched(mesh, feats)
-        mask = place_batched(mesh, mask)
-    pools, counts = _seed_batched_jit(
-        keys, feats, mask,
-        pop_size=int(pop_size), oversample=int(oversample),
-        max_rounds=int(max_rounds), tech=tech,
-    )
-    counts = np.asarray(counts)
-    if counts.min() < pop_size:
-        bad = int(np.argmin(counts))
-        raise RuntimeError(
-            f"could not seed {pop_size} valid designs for batch element {bad} "
-            f"({int(counts[bad])} found)"
-        )
-    return pools
-
-
-# ------------------------------------------------------------- result prep
-def _top_unique(
-    genomes: np.ndarray, scores: np.ndarray, k: int
-) -> Tuple[np.ndarray, np.ndarray]:
-    """Best-k designs, unique in *decoded grid index* space.
-
-    Fully vectorized host-side numpy (``np.unique`` over score-sorted grid
-    indices instead of a Python loop over all G*P designs, and a host
-    decode instead of per-call jnp dispatches): sorting by score first
-    means each unique design's first occurrence is its best-scoring one,
-    and non-finite scores (inf/nan) sort to the end, so dropping them
-    equals the old truncate-at-first-non-finite rule."""
-    idx = space.decode_indices_np(genomes)
-    order = np.argsort(scores, kind="stable")
-    _, first = np.unique(idx[order], axis=0, return_index=True)
-    first.sort()  # positions within `order`, ascending = best-first
-    keep = order[first]
-    keep = keep[np.isfinite(scores[keep])][:k]
-    return genomes[keep], scores[keep]
-
-
-def _finalize(
-    ga: GAResult, names: Sequence[str], objective: str, top_k: int
-) -> SearchResult:
-    G1, P, n = ga.genomes.shape
-    flat_g = np.asarray(ga.genomes).reshape(-1, n)
-    flat_s = np.asarray(ga.scores).reshape(-1)
-    top_g, top_s = _top_unique(flat_g, flat_s, top_k)
-    top_designs = space.design_dicts_from_indices(space.decode_indices_np(top_g))
-    conv = np.minimum.accumulate(np.asarray(ga.scores).min(axis=1))
-    return SearchResult(
-        workload_names=tuple(names),
-        objective=objective,
-        ga=ga,
-        top_designs=top_designs,
-        top_scores=top_s,
-        top_genomes=top_g,
-        convergence=conv,
-    )
 
 
 # ----------------------------------------------------------------- drivers
@@ -351,21 +98,14 @@ def run_search(
     tech: TechParams = TECH,
     backend: str = "jnp",
 ) -> SearchResult:
-    k_seed, k_ga = jax.random.split(key)
-    if init_genomes is None:
-        init_genomes = seed_population(k_seed, ws, pop_size, tech=tech)
-    else:
-        init_genomes = jnp.array(init_genomes)  # copy: the GA donates its init
-    eval_fn = _ctx_eval(objective, float(area_constr), tech, backend)
-    ga = run_ga(
-        k_ga,
-        eval_fn,
-        pop_size=pop_size,
-        generations=generations,
+    """One joint search = a single-request engine plan."""
+    req = SearchRequest(
+        ws=ws, objective=objective, area_constr=float(area_constr),
+        key=key, backend=backend, pop_size=int(pop_size),
+        generations=int(generations), top_k=int(top_k), tech=tech,
         init_genomes=init_genomes,
-        ctx=_eval_ctx(ws.feats, ws.mask, tech, backend),
     )
-    return _finalize(ga, ws.names, objective, top_k)
+    return default_engine().run([req])[0]
 
 
 def joint_search(key, ws: WorkloadSet, **kw) -> SearchResult:
@@ -389,7 +129,8 @@ def batched_search(
     backend: str = "jnp",
     mesh=None,
 ) -> List[SearchResult]:
-    """B independent searches as ONE vmapped, cached XLA program.
+    """B independent searches through the engine (one plan when shapes
+    agree, chunked at the engine's slot limit for very large B).
 
     ``keys`` (B, 2) stacked PRNG keys; ``feats`` (B, W, L, 6) / ``mask``
     (B, W, L) per-element workload sets; ``init_genomes`` (B, P, n) or
@@ -406,67 +147,42 @@ def batched_search(
     ctx path).  Scores stay bit-identical to ``mesh=None``
     (tests/test_search_sharded.py).
     """
-    keys = jnp.asarray(keys)
-    feats = jnp.asarray(feats)
-    mask = jnp.asarray(mask)
-    if mesh is None:
-        place = lambda x, **_: x  # noqa: E731 — identity placement
-    else:
-        from repro.core.distributed import place_batched
-
-        place = partial(place_batched, mesh)
-    keys, feats, mask = place(keys), place(feats), place(mask)
+    # ONE device->host transfer per input; the per-request WorkloadSets are
+    # numpy-backed views, so the engine's slot packing (and fingerprinting)
+    # never syncs the device again on the warm path
+    keys = np.asarray(keys)
+    feats = np.asarray(feats, np.float32)
+    mask = np.asarray(mask, bool)
     B = keys.shape[0]
-    ks = jax.vmap(lambda k: jax.random.split(k))(keys)  # (B, 2, 2)
-    k_seed, k_ga = ks[:, 0], ks[:, 1]
-    if init_genomes is None:
-        init_genomes = seed_population_batched(
-            k_seed, feats, mask, pop_size, tech=tech, mesh=mesh
-        )
-    else:
-        init_genomes = jnp.array(init_genomes)  # copy: the GA donates its init
-    init_genomes = place(init_genomes, pop_dim=1)
-    # table backend: reduce the layer axis ONCE per element here; the GA's
-    # per-generation evals then gather from the (search-sharded) tables
-    ctx = tuple(
-        jax.tree_util.tree_map(place, c)
-        for c in _eval_ctx(feats, mask, tech, backend, batched=True)
-    )
-    if obj_weights is None:
-        eval_fn = _ctx_eval(objective, float(area_constr), tech, backend)
-    else:
-        ctx = ctx + (place(jnp.asarray(obj_weights, jnp.float32)),)
-        eval_fn = _ctx_eval(None, float(area_constr), tech, backend)
-    ga = run_ga_batched(
-        k_ga,
-        eval_fn,
-        pop_size=pop_size,
-        generations=generations,
-        init_genomes=init_genomes,
-        ctx=ctx,
-    )
     if names is None:
         names_b = [tuple(f"w{j}" for j in range(feats.shape[1]))] * B
     elif isinstance(names[0], str):
         names_b = [tuple(names)] * B
     else:
         names_b = [tuple(n) for n in names]
-    if obj_weights is None:
-        labels = [objective] * B
-    else:
-        # label each element with the kind its weights reproduce, so
-        # SearchResult.objective stays truthful under the weighted path
-        inv = {v: k for k, v in OBJECTIVE_WEIGHTS.items()}
-        wv = np.asarray(obj_weights, np.float64)
-        labels = [
-            inv.get(tuple(wv[b]), f"weighted{tuple(wv[b])}") for b in range(B)
-        ]
-    # one device->host transfer per field, then pure-numpy per-element prep
-    ga_np = GAResult(*(np.asarray(f) for f in ga))
-    return [
-        _finalize(GAResult(*(f[b] for f in ga_np)), names_b[b], labels[b], top_k)
+    if obj_weights is not None:
+        obj_weights = np.asarray(obj_weights, np.float64)
+    if init_genomes is not None:
+        init_genomes = np.asarray(init_genomes)
+    reqs = [
+        SearchRequest(
+            ws=WorkloadSet(names=names_b[b], feats=feats[b], mask=mask[b]),
+            objective=objective,
+            obj_weights=(
+                None if obj_weights is None else tuple(obj_weights[b])
+            ),
+            area_constr=float(area_constr),
+            key=keys[b],
+            backend=backend,
+            pop_size=int(pop_size),
+            generations=int(generations),
+            top_k=int(top_k),
+            tech=tech,
+            init_genomes=None if init_genomes is None else init_genomes[b],
+        )
         for b in range(B)
     ]
+    return default_engine().run(reqs, mesh=mesh)
 
 
 def joint_search_batched(keys: jnp.ndarray, ws: WorkloadSet, **kw) -> List[SearchResult]:
@@ -489,12 +205,12 @@ def separate_search(
 ) -> Dict[str, SearchResult]:
     """One single-workload GA per workload (the paper's baseline).
 
-    ``batched=True`` (default) runs all W GAs as one vmapped XLA program;
-    ``batched=False`` is the sequential reference path.  Both derive
-    per-workload keys from ``jax.random.split(key, W)`` and return
-    identical scores (asserted in tests/test_search_batched.py).  ``mesh``
-    shards the W GAs over the ``search`` mesh axis (batched path only; the
-    sequential reference is single-device by construction)."""
+    ``batched=True`` (default) runs all W GAs as one engine plan;
+    ``batched=False`` is the sequential reference path (one single-slot
+    plan per workload).  Both derive per-workload keys from
+    ``jax.random.split(key, W)`` and return identical scores (asserted in
+    tests/test_search_batched.py).  ``mesh`` shards the W GAs over the
+    ``search`` mesh axis (batched path only)."""
     if mesh is not None and not batched:
         raise ValueError("mesh= requires the batched path (batched=True)")
     keys = jax.random.split(key, ws.n)

@@ -18,6 +18,15 @@ how many searches run in parallel.  ``--backend table`` evaluates through
 the factorized per-workload grid tables (``imc.tables``): throughput
 independent of layer count, which is what makes deep ``--lm-workloads``
 tables free at search time.
+
+``--serve N`` runs the DSE service instead: N heterogeneous requests
+(cycling workload subsets x objectives x seeds over the selected
+workload set) are submitted to the continuous-batching queue
+(``serve.dse.DSEService``) and drained slot-packed through the shared
+search engine — the per-request best designs stream as each launch
+lands, followed by a requests/s summary:
+
+    python -m repro.launch.search --serve 256 --backend table
 """
 from __future__ import annotations
 
@@ -58,6 +67,47 @@ def build_workloads(args) -> WorkloadSet:
     return pack_workloads(named)
 
 
+def serve(args, ws: WorkloadSet, mesh) -> int:
+    """``--serve N``: drain N mixed requests through the DSE service."""
+    from repro.serve.dse import DSEService, paper_request_mix
+
+    svc = DSEService(mesh=mesh)
+    svc.submit_all(paper_request_mix(
+        ws, args.serve, backend=args.backend, pop_size=args.pop,
+        generations=args.gens, area_constr=args.area,
+    ))
+    print(f"[serve] {args.serve} heterogeneous requests queued "
+          f"(backend={args.backend}, slots={svc.engine.max_slots})")
+    t0 = time.time()
+    results = {}
+    for rid, res in svc.stream():
+        results[rid] = res
+        best = f"{res.top_scores[0]:.4g}" if len(res.top_scores) else "infeasible"
+        print(f"[serve] rid {rid}: {res.objective} on "
+              f"{','.join(res.workload_names)} -> best={best}")
+    dt = time.time() - t0
+    n_evald = args.serve * args.pop * (args.gens + 1)
+    print(f"[serve] drained {len(results)} requests in {dt:.1f}s "
+          f"({len(results)/dt:.1f} req/s, {n_evald/dt:.0f} designs/s, "
+          f"{svc.stats.launches} launches)")
+    if args.out:
+        payload = [
+            {
+                "rid": rid,
+                "objective": res.objective,
+                "workloads": list(res.workload_names),
+                "best": float(res.top_scores[0]) if len(res.top_scores) else None,
+                "best_design": res.top_designs[0] if res.top_designs else None,
+            }
+            for rid, res in sorted(results.items())
+        ]
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[serve] wrote {args.out}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workloads", default="", help="CNN names, comma-sep")
@@ -81,6 +131,12 @@ def main(argv=None) -> int:
         help="(search, population) mesh, e.g. 8x1 — shard the batched "
              "programs over the visible devices",
     )
+    ap.add_argument(
+        "--serve", type=int, default=0, metavar="N",
+        help="run the continuous-batching DSE service on N heterogeneous "
+             "requests (mixed workload subsets / objectives / seeds) "
+             "instead of the one-off joint search",
+    )
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -94,6 +150,9 @@ def main(argv=None) -> int:
 
     ws = build_workloads(args)
     print(f"[search] workloads: {ws.names} (L_max={ws.feats.shape[1]})")
+
+    if args.serve:
+        return serve(args, ws, mesh)
 
     if args.seeds < 1:
         ap.error("--seeds must be >= 1")

@@ -1,1 +1,11 @@
 from repro.serve.steps import make_decode_step, make_prefill_step  # noqa: F401
+
+
+def __getattr__(name):
+    # lazy: serve.dse pulls in the whole search stack; LM-serving users
+    # (serve.engine / serve.steps) shouldn't pay that import
+    if name in ("DSEService", "paper_request_mix"):
+        from repro.serve import dse
+
+        return getattr(dse, name)
+    raise AttributeError(name)

@@ -1,0 +1,184 @@
+"""DSE-as-a-service: continuous batching of heterogeneous search requests.
+
+The design-search twin of ``serve.engine`` (which continuous-batches LM
+prefill/decode into fixed slots): clients ``submit`` ``SearchRequest``s —
+any mix of workload sets, objectives, areas, seeds and backends — and the
+service drains the queue slot-packed into as few XLA launches as possible
+through the shared ``core.engine.SearchEngine``:
+
+  * ``submit``  — enqueue a request, returns a request id.  Table-backend
+    requests get their factorized cost tables built (fingerprint-memoized)
+    at ingest, the way the LM engine prefills on admission — the drain
+    itself then launches only the cached seeding + GA programs.
+  * ``step``    — execute ONE plan (one XLA launch) of the current queue;
+    finished results free their slots immediately and newly submitted
+    requests join the next step's packing.
+  * ``drain``   — step until the queue is empty; returns {rid: result}.
+  * ``stream``  — generator form of drain: yields (rid, SearchResult) per
+    completed plan, so callers consume results while later plans run.
+
+Because the ``table`` backend's traced ctx is layer-free, requests over
+*different* workload sets share one compiled program: 256 mixed requests
+(subsets x objectives x seeds) drain through 4 launches of 2 cached
+programs, bit-identical to running each request alone
+(tests/test_engine.py).  ``mesh=`` lays every launch over the 2-D
+(search, population) device mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.engine import (
+    BatchPlan,
+    SearchEngine,
+    SearchRequest,
+    SearchResult,
+    plan_batch,
+)
+from repro.core.objectives import OBJECTIVES
+from repro.workloads.pack import WorkloadSet
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Running drain telemetry (the bench's requests/s row reads these)."""
+
+    submitted: int = 0
+    completed: int = 0
+    launches: int = 0
+    busy_s: float = 0.0  # wall time spent inside execute()
+
+    def requests_per_s(self) -> float:
+        return self.completed / self.busy_s if self.busy_s > 0 else 0.0
+
+
+class DSEService:
+    """Continuous-batching front end over a ``SearchEngine``."""
+
+    def __init__(
+        self,
+        *,
+        engine: Optional[SearchEngine] = None,
+        mesh=None,
+        max_slots: int = 64,
+    ):
+        self.engine = engine or SearchEngine(mesh=mesh, max_slots=max_slots)
+        self.queue: List[Tuple[int, SearchRequest]] = []
+        self.results: Dict[int, SearchResult] = {}
+        self.stats = ServiceStats()
+        self._next_rid = 0
+        # plans for the current queue snapshot; invalidated on submit so
+        # a quiescent drain keeps plan_batch's padded-tail chunking (every
+        # chunk of a group = ONE compiled program) instead of re-planning
+        # the shrunken residue into a fresh program shape each step
+        self._plans_cache: Optional[List[BatchPlan]] = None
+        self._snapshot: List[Tuple[int, SearchRequest]] = []
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: SearchRequest) -> int:
+        """Enqueue one request; returns its rid.  Validates the request's
+        signature eagerly (bad objectives/backends fail at submit, not
+        mid-drain) and pre-builds table-backend cost tables so drains only
+        launch the cached seeding/GA programs."""
+        req.signature()
+        if req.backend == "table":
+            req.ws.tables(req.tech)  # fingerprint-memoized ingest prefill
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append((rid, req))
+        self.stats.submitted += 1
+        self._plans_cache = None  # next step re-packs the grown queue
+        return rid
+
+    def submit_all(self, reqs: Sequence[SearchRequest]) -> List[int]:
+        return [self.submit(r) for r in reqs]
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # --------------------------------------------------------------- serving
+    def _plans(self) -> List[BatchPlan]:
+        """Plans over the current queue snapshot, cached across steps: a
+        drain executes the ONE padded chunking plan_batch produced (plan
+        indices refer to the snapshot), and only a new submission forces
+        a re-pack — so a group's ragged tail launches as the same padded
+        program as its full chunks rather than compiling a fresh
+        residual-size program."""
+        if self._plans_cache is None:
+            self._snapshot = list(self.queue)
+            self._plans_cache = plan_batch(
+                [r for _, r in self._snapshot], max_slots=self.engine.max_slots
+            )
+        return self._plans_cache
+
+    def step(self) -> List[Tuple[int, SearchResult]]:
+        """Run ONE slot-packed launch (the first plan of the current
+        queue); returns that plan's (rid, result) pairs.  Requests
+        submitted while a step runs simply join the next plan."""
+        if not self.queue:
+            return []
+        plans = self._plans()
+        plan = plans.pop(0)
+        if not plans:
+            self._plans_cache = None
+        t0 = time.time()
+        results = self.engine.execute(plan)
+        self.stats.busy_s += time.time() - t0
+        self.stats.launches += 1
+        done: List[Tuple[int, SearchResult]] = []
+        for qi, res in zip(plan.indices, results):
+            rid = self._snapshot[qi][0]
+            self.results[rid] = res
+            done.append((rid, res))
+        taken = {rid for rid, _ in done}
+        self.queue = [q for q in self.queue if q[0] not in taken]
+        self.stats.completed += len(done)
+        return done
+
+    def stream(self) -> Iterator[Tuple[int, SearchResult]]:
+        """Drain, yielding each plan's results as soon as its launch
+        finishes — callers overlap their own post-processing with the
+        remaining launches."""
+        while self.queue:
+            yield from self.step()
+
+    def drain(self) -> Dict[int, SearchResult]:
+        """Run the whole queue; returns {rid: SearchResult} for every
+        request ever completed (incl. prior drains)."""
+        for _ in self.stream():
+            pass
+        return self.results
+
+
+def paper_request_mix(
+    ws: WorkloadSet,
+    n: int,
+    *,
+    backend: str = "table",
+    pop_size: int = 40,
+    generations: int = 10,
+    area_constr: float = 150.0,
+    seed0: int = 0,
+) -> List[SearchRequest]:
+    """N heterogeneous requests over ``ws``: cycles through workload
+    subsets (full set, singles, pairs) x objective kinds x seeds — the
+    service's canonical mixed traffic (bench_dse_service, the CI
+    serve-smoke leg, ``launch.search --serve``)."""
+    W = ws.n
+    subsets = [tuple(range(W))]
+    subsets += [(i,) for i in range(W)]
+    subsets += [(i, (i + 1) % W) for i in range(W)] if W > 1 else []
+    return [
+        SearchRequest(
+            ws=ws.subset(list(subsets[i % len(subsets)])),
+            objective=OBJECTIVES[i % len(OBJECTIVES)],
+            area_constr=area_constr,
+            seed=seed0 + i,
+            backend=backend,
+            pop_size=pop_size,
+            generations=generations,
+        )
+        for i in range(n)
+    ]

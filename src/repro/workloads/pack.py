@@ -3,18 +3,27 @@
 A set of W workloads becomes
     feats (W, L_max, 6) float32   and   mask (W, L_max) bool
 so the joint `max_w` reduction and the per-layer cost sums are tensor ops.
-``WorkloadSet.tables()`` memoizes the factorized cost-model statistics
-(``imc.tables``): the layer axis is reduced once per (set, tech) and the
-``backend="table"`` search path re-gathers from the cached tables forever
-after.
+``WorkloadSet.fingerprint()`` is a content hash (feats/mask bytes + names),
+and ``WorkloadSet.tables()`` memoizes the factorized cost-model statistics
+(``imc.tables``) on it: the layer axis is reduced once per (content, tech)
+— re-packing an identical set (a fresh ``pack_workloads`` call, an equal
+``subset``) hits the same cached tables, and the DSE engine
+(``core.engine``) keys its padded-table plan cache on the same fingerprint.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+import hashlib
+from typing import Dict, List, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+# (fingerprint, tech) -> WorkloadTables.  Content-keyed, NOT object-keyed:
+# two separately packed but identical sets share one table build.  Entries
+# are small (a few KB) and the fingerprint space in one process is tiny,
+# so the memo is unbounded by design.
+_TABLES_MEMO: Dict[tuple, object] = {}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,18 +44,37 @@ class WorkloadSet:
             mask=self.mask[np.array(idx)],
         )
 
+    def fingerprint(self) -> str:
+        """Content hash: sha256 over the feats/mask bytes (+ shapes, so
+        equal byte streams of different layouts can't collide) and the
+        workload names.  Cached on the instance after the first call."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            h = hashlib.sha256()
+            feats = np.ascontiguousarray(np.asarray(self.feats, np.float32))
+            mask = np.ascontiguousarray(np.asarray(self.mask, bool))
+            h.update(repr((feats.shape, mask.shape)).encode())
+            h.update(feats.tobytes())
+            h.update(mask.tobytes())
+            h.update("\x00".join(self.names).encode())
+            fp = h.hexdigest()
+            self.__dict__["_fingerprint"] = fp
+        return fp
+
     def tables(self, tech=None):
         """Per-workload sufficient statistics for the factorized cost model
-        (``imc.tables.WorkloadTables``), cached per tech on this set.  The
-        import is deferred because ``imc.cost`` imports this module."""
+        (``imc.tables.WorkloadTables``), memoized on ``(fingerprint, tech)``
+        — identical re-packed sets hit the cache.  The import is deferred
+        because ``imc.cost`` imports this module."""
         from repro.imc.tables import build_tables_arrays
         from repro.imc.tech import TECH
 
         tech = tech or TECH
-        cache = self.__dict__.setdefault("_tables_cache", {})
-        if tech not in cache:
-            cache[tech] = build_tables_arrays(self.feats, self.mask, tech)
-        return cache[tech]
+        key = (self.fingerprint(), tech)
+        hit = _TABLES_MEMO.get(key)
+        if hit is None:
+            hit = _TABLES_MEMO[key] = build_tables_arrays(self.feats, self.mask, tech)
+        return hit
 
 
 def pack_workloads(named_layers: Sequence[Tuple[str, List[Tuple]]]) -> WorkloadSet:

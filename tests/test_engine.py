@@ -1,0 +1,326 @@
+"""DSE engine + service: heterogeneous packing == per-request searches.
+
+The acceptance bar for the request -> plan -> execute stack: a batch
+mixing workload sets, objectives, areas, seeds and backends must return
+BIT-IDENTICAL scores and top designs vs running each request alone
+(``run_search``), including under the fake-8-device (search, population)
+mesh, and a 256-request drain must compile at most 4 programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as engine_mod
+from repro.core import ga as ga_mod
+from repro.core.engine import (
+    SearchEngine,
+    SearchRequest,
+    default_engine,
+    plan_batch,
+)
+from repro.core.objectives import OBJECTIVES
+from repro.core.search import run_search
+from repro.serve.dse import DSEService, paper_request_mix
+from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+from repro.workloads.pack import _TABLES_MEMO, pack_workloads
+
+POP, GENS = 16, 3
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+
+
+def _mixed_requests(ws, n, backend="table", pop=POP, gens=GENS, seed0=0):
+    """n requests cycling subsets x objectives x areas x seeds."""
+    subsets = [[0, 1, 2, 3], [0], [2], [1, 3], [3, 2, 1, 0], [0, 2]]
+    areas = [150.0, 150.0, 120.0]
+    return [
+        SearchRequest(
+            ws=ws.subset(subsets[i % len(subsets)]),
+            objective=OBJECTIVES[i % len(OBJECTIVES)],
+            area_constr=areas[i % len(areas)],
+            seed=seed0 + i,
+            backend=backend,
+            pop_size=pop,
+            generations=gens,
+        )
+        for i in range(n)
+    ]
+
+
+def _assert_matches_run_search(req, res):
+    ref = run_search(
+        req.prng_key(), req.ws, objective=req.objective,
+        area_constr=req.area_constr, pop_size=req.pop_size,
+        generations=req.generations, top_k=req.top_k, backend=req.backend,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.ga.scores), np.asarray(ref.ga.scores)
+    )
+    np.testing.assert_array_equal(res.top_scores, ref.top_scores)
+    np.testing.assert_array_equal(res.top_genomes, ref.top_genomes)
+    assert res.workload_names == ref.workload_names
+    assert res.objective == ref.objective
+
+
+# -------------------------------------------------------------- planning
+def test_plan_batch_groups_by_signature(ws):
+    reqs = _mixed_requests(ws, 6, backend="table")
+    reqs += _mixed_requests(ws, 2, backend="table", pop=POP + 2)  # new pop
+    # dense requests group by exact (W, L): two subsets of different W
+    reqs += [SearchRequest(ws=ws.subset([0]), backend="jnp", pop_size=POP,
+                           generations=GENS),
+             SearchRequest(ws=ws.subset([0, 1]), backend="jnp", pop_size=POP,
+                           generations=GENS)]
+    plans = plan_batch(reqs)
+    assert [len(p.requests) for p in plans] == [6, 2, 1, 1]
+    # the table group ignores workload shape entirely; its chunk is padded
+    # to the widest/deepest member
+    assert plans[0].pad_w == 4 and plans[0].slots == 6
+    assert {p.signature for p in plans[2:]} == {
+        plans[2].signature, plans[3].signature
+    }
+    assert plans[2].signature != plans[3].signature
+
+
+def test_plan_batch_chunks_large_groups(ws):
+    reqs = _mixed_requests(ws, 150, backend="table")
+    plans = plan_batch(reqs, max_slots=64)
+    assert [p.slots for p in plans] == [64, 64, 64]
+    assert [len(p.requests) for p in plans] == [64, 64, 22]
+    assert sorted(i for p in plans for i in p.indices) == list(range(150))
+
+
+def test_plan_batch_exact_fit_no_padding(ws):
+    # a group that fits in one launch runs at its exact size (driver paths
+    # like batched_search pay zero pad overhead)
+    plans = plan_batch(_mixed_requests(ws, 20, backend="table"), max_slots=64)
+    assert len(plans) == 1 and plans[0].slots == 20
+
+
+def test_request_validation(ws):
+    with pytest.raises(ValueError, match="objective"):
+        SearchRequest(ws=ws, objective="nope").signature()
+    with pytest.raises(ValueError, match="backend"):
+        SearchRequest(ws=ws, backend="nope").signature()
+
+
+# ------------------------------------------------- heterogeneous parity
+def test_heterogeneous_table_batch_matches_run_search(ws):
+    reqs = _mixed_requests(ws, 8, backend="table")
+    out = default_engine().run(reqs)
+    for req, res in zip(reqs, out):
+        _assert_matches_run_search(req, res)
+
+
+def test_heterogeneous_dense_batch_matches_run_search(ws):
+    # same (W, L) shape -> one dense group, mixed objectives/areas/seeds
+    subsets = [[0, 1], [2, 3], [3, 0], [1, 2]]
+    reqs = [
+        SearchRequest(
+            ws=ws.subset(subsets[i % 4]), objective=OBJECTIVES[i % 4],
+            area_constr=[150.0, 100.0][i % 2], seed=i, backend="jnp",
+            pop_size=POP, generations=GENS,
+        )
+        for i in range(6)
+    ]
+    assert len(plan_batch(reqs)) == 1
+    out = default_engine().run(reqs)
+    for req, res in zip(reqs, out):
+        _assert_matches_run_search(req, res)
+
+
+def test_mixed_backends_one_submission(ws):
+    reqs = [
+        SearchRequest(ws=ws, seed=0, backend="table", pop_size=POP,
+                      generations=GENS),
+        SearchRequest(ws=ws, seed=1, backend="jnp", pop_size=POP,
+                      generations=GENS),
+        SearchRequest(ws=ws.subset([1]), seed=2, backend="table",
+                      pop_size=POP, generations=GENS),
+    ]
+    assert len(plan_batch(reqs)) == 2  # table group + dense group
+    out = default_engine().run(reqs)
+    for req, res in zip(reqs, out):
+        _assert_matches_run_search(req, res)
+
+
+def test_engine_run_preserves_request_order(ws):
+    reqs = _mixed_requests(ws, 5, backend="table")
+    reqs.insert(2, SearchRequest(ws=ws, seed=99, backend="jnp",
+                                 pop_size=POP, generations=GENS))
+    out = default_engine().run(reqs)
+    for req, res in zip(reqs, out):
+        assert res.workload_names == req.ws.names
+
+
+def test_init_genomes_mixed_with_seeded(ws):
+    """Requests with a caller init pack with seeded ones; the caller's
+    array is copied (the GA donates), never consumed."""
+    from repro.core.search import seed_population
+
+    init = seed_population(jax.random.PRNGKey(7), ws, POP)
+    reqs = [
+        SearchRequest(ws=ws, seed=0, backend="table", pop_size=POP,
+                      generations=2, init_genomes=init),
+        SearchRequest(ws=ws, seed=1, backend="table", pop_size=POP,
+                      generations=2),
+    ]
+    out = default_engine().run(reqs)
+    assert len(out) == 2
+    assert np.asarray(init).shape == (POP, init.shape[1])  # still readable
+    ref = run_search(reqs[0].prng_key(), ws, pop_size=POP, generations=2,
+                     backend="table", init_genomes=init)
+    np.testing.assert_array_equal(
+        np.asarray(out[0].ga.scores), np.asarray(ref.ga.scores)
+    )
+
+
+# --------------------------------------------------- acceptance: 256-mix
+def test_256_requests_drain_through_at_most_4_programs(ws):
+    """256 heterogeneous table-backend requests (mixed workload subsets,
+    objectives, seeds) drain through <= 4 compiled search programs (one
+    seeding jit + one GA jit entry in steady state), bit-identical to
+    per-request ``run_search``."""
+    pop, gens = 8, 2
+    reqs = _mixed_requests(ws, 256, backend="table", pop=pop, gens=gens,
+                           seed0=10_000)
+    svc = DSEService()
+    rids = svc.submit_all(reqs)
+    n_ga0 = ga_mod._run_ga_batched_jit._cache_size()
+    n_seed0 = engine_mod._seed_batched_jit._cache_size()
+    results = svc.drain()
+    new_programs = (
+        ga_mod._run_ga_batched_jit._cache_size() - n_ga0
+        + engine_mod._seed_batched_jit._cache_size() - n_seed0
+    )
+    assert new_programs <= 4, new_programs
+    assert svc.stats.launches == 4  # 256 / 64 slots
+    assert len(results) == 256 and set(rids) == set(results)
+    # bit-identical spot checks across the whole mix (every 37th request
+    # hits different subset/objective/area combinations)
+    for i in range(0, 256, 37):
+        _assert_matches_run_search(reqs[i], results[rids[i]])
+
+
+# ----------------------------------------------------------- fingerprints
+def test_fingerprint_content_keyed(ws):
+    ws2 = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    assert ws2 is not ws and ws2.fingerprint() == ws.fingerprint()
+    assert ws.subset([0]).fingerprint() != ws.fingerprint()
+    assert ws.subset([0, 1]).fingerprint() == ws2.subset([0, 1]).fingerprint()
+
+
+def test_tables_memo_hits_across_repacked_sets(ws):
+    from repro.imc.tech import TECH
+
+    t1 = ws.tables()
+    ws2 = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    assert ws2.tables() is t1  # content-keyed, not object-keyed
+    assert (ws.fingerprint(), TECH) in _TABLES_MEMO
+
+
+def test_engine_padded_table_cache_content_keyed(ws):
+    eng = SearchEngine()
+    r1 = SearchRequest(ws=ws.subset([0, 1]), backend="table")
+    r2 = SearchRequest(ws=ws.subset([0, 1]), backend="table", seed=5)
+    t1 = eng._padded_request_tables(r1, 4)
+    t2 = eng._padded_request_tables(r2, 4)
+    assert t1 is t2  # same fingerprint + pad width -> one padded copy
+    assert t1[0].shape[0] == 4  # demand leaf padded W 2 -> 4
+    np.testing.assert_array_equal(t1[0][2:], 0.0)
+
+
+# -------------------------------------------------------------- service
+def test_service_interleaved_submit_and_step(ws):
+    svc = DSEService()
+    first = svc.submit_all(_mixed_requests(ws, 3, pop=8, gens=2))
+    done1 = svc.step()
+    assert {rid for rid, _ in done1} == set(first)
+    # a request submitted after the first step joins the next plan
+    late = svc.submit(SearchRequest(ws=ws.subset([1]), seed=42,
+                                    backend="table", pop_size=8,
+                                    generations=2))
+    assert svc.pending() == 1
+    done2 = svc.step()
+    assert [rid for rid, _ in done2] == [late]
+    assert svc.pending() == 0 and svc.step() == []
+    assert svc.stats.completed == 4 and svc.stats.launches == 2
+
+
+def test_service_ragged_drain_keeps_padded_tail_program(ws):
+    """A drain whose group size is not a multiple of the slot count must
+    execute the ORIGINAL padded-tail chunking (one compiled program per
+    group), not re-plan the shrunken residue into a fresh program shape
+    each step."""
+    svc = DSEService(max_slots=4)
+    reqs = [SearchRequest(ws=ws, seed=100 + i, backend="table", pop_size=8,
+                          generations=2) for i in range(6)]
+    rids = svc.submit_all(reqs)
+    # warm the 4-slot program shape so only NEW shapes would compile below
+    pre = SearchEngine(max_slots=4)
+    pre.run(reqs[:4])
+    n_ga0 = ga_mod._run_ga_batched_jit._cache_size()
+    n_seed0 = engine_mod._seed_batched_jit._cache_size()
+    results = svc.drain()
+    assert len(results) == 6 and svc.stats.launches == 2  # 4 + padded 2
+    new = (ga_mod._run_ga_batched_jit._cache_size() - n_ga0
+           + engine_mod._seed_batched_jit._cache_size() - n_seed0)
+    assert new == 0, f"ragged tail compiled {new} extra program(s)"
+    for req, rid in zip(reqs, rids):
+        _assert_matches_run_search(req, results[rid])
+
+
+def test_service_stream_yields_all(ws):
+    svc = DSEService()
+    rids = svc.submit_all(_mixed_requests(ws, 4, pop=8, gens=2))
+    seen = [rid for rid, _ in svc.stream()]
+    assert sorted(seen) == sorted(rids)
+    assert all(len(svc.results[r].top_scores) >= 0 for r in rids)
+
+
+def test_paper_request_mix_covers_all_kinds(ws):
+    reqs = paper_request_mix(ws, 16, pop_size=8, generations=2)
+    assert {r.objective for r in reqs} == set(OBJECTIVES)
+    assert len({r.ws.names for r in reqs}) > 1
+    assert len({r.seed for r in reqs}) == 16
+
+
+# ------------------------------------------------------------- multidevice
+@pytest.mark.multidevice
+def test_heterogeneous_batch_sharded_parity(ws):
+    """The packed heterogeneous drain on a (search, population) mesh is
+    bit-identical to the meshless engine AND to per-request run_search."""
+    from repro.core.distributed import sharded_search_engine
+    from repro.launch.mesh import make_search_mesh
+
+    reqs = _mixed_requests(ws, 8, backend="table")
+    eng = sharded_search_engine(make_search_mesh(2, 4))
+    out = eng.run(reqs)
+    ref = SearchEngine().run(reqs)
+    for req, s, r in zip(reqs, out, ref):
+        np.testing.assert_array_equal(
+            np.asarray(s.ga.scores), np.asarray(r.ga.scores)
+        )
+        np.testing.assert_array_equal(s.top_genomes, r.top_genomes)
+        _assert_matches_run_search(req, s)
+
+
+@pytest.mark.multidevice
+def test_service_on_mesh(ws):
+    # (2, 4) mirrors the table-backend layouts the sharded parity suite
+    # pins (tests/test_search_sharded.py: (2,4)/(8,1)); a (4,2) mesh with
+    # a ragged batch ULP-drifts the table path even on the PRE-engine
+    # stack (static objective + argsort survival), so it is outside the
+    # bit-parity envelope the repo has ever guaranteed.
+    from repro.launch.mesh import make_search_mesh
+
+    svc = DSEService(mesh=make_search_mesh(2, 4))
+    reqs = _mixed_requests(ws, 6, pop=8, gens=2)
+    rids = svc.submit_all(reqs)
+    results = svc.drain()
+    assert set(rids) == set(results)
+    for rid, req in zip(rids, reqs):
+        _assert_matches_run_search(req, results[rid])

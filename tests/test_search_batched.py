@@ -88,6 +88,22 @@ def test_ga_odd_population(ws):
     assert (np.diff(conv[np.isfinite(conv)]) <= 1e-6).all()
 
 
+def test_survivor_selection_matches_argsort():
+    """The integer-key survival sort (``ga._survivor_indices``) must pick
+    IDENTICAL survivors, in identical order, to the stable float argsort
+    it replaced — including duplicate scores (lower index wins), +inf
+    infeasibles (sort last) and mixed +-0.0 (equal keys)."""
+    rng = np.random.default_rng(0)
+    for trial in range(50):
+        P = int(rng.integers(1, 40))
+        pool = np.array([0.0, -0.0, 1.5, 1.5, np.inf, 3.25, 7.0, 1e30],
+                        np.float32)
+        alls = rng.choice(pool, size=2 * P).astype(np.float32)
+        ref = np.argsort(alls, kind="stable")[:P]
+        got = np.asarray(ga_mod._survivor_indices(jnp.asarray(alls), P))
+        np.testing.assert_array_equal(got, ref)
+
+
 def test_ga_jit_cached_across_seeds(ws):
     """Different seeds / same shapes must NOT retrace the GA program."""
     run_search(jax.random.PRNGKey(0), ws, pop_size=8, generations=2)

@@ -4,22 +4,31 @@
 #   bash tools/ci.sh multidevice   # tier-1 + sharding tests + sharded bench
 #                                  # row on a fake 8-device host
 #   bash tools/ci.sh bench-smoke   # tiny search-throughput run per backend;
-#                                  # appends the 'table' row to
-#                                  # experiments/search_throughput.json so
-#                                  # the perf trajectory is recorded per PR
+#                                  # appends the 'table' and 'service' rows
+#                                  # of experiments/search_throughput.json
+#                                  # so the perf trajectory is recorded per
+#                                  # PR
+#   bash tools/ci.sh serve-smoke   # DSE-service smoke: submit ~32 mixed
+#                                  # requests to the continuous-batching
+#                                  # queue, drain, assert every result is
+#                                  # present with a finite best score
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "multidevice" ]]; then
   # fake 8 XLA host devices so the @pytest.mark.multidevice sharding tests
-  # (tests/test_search_sharded.py) actually exercise the 2-D mesh on CPU CI
+  # (tests/test_search_sharded.py, tests/test_engine.py) actually exercise
+  # the 2-D mesh on CPU CI
   export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
   python -m pytest -x -q
   python -m benchmarks.bench_search_throughput --quick --mesh 2x4
 elif [[ "${1:-}" == "bench-smoke" ]]; then
   python -m benchmarks.bench_search_throughput --quick
   python -m benchmarks.bench_search_throughput --quick --backend table
+  python -m benchmarks.bench_dse_service --quick
+elif [[ "${1:-}" == "serve-smoke" ]]; then
+  python -m benchmarks.bench_dse_service --smoke
 else
   python -m pytest -x -q
   python -m benchmarks.run --quick
