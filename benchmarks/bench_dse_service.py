@@ -8,18 +8,27 @@ records:
   * cold_s / warm_s        — first drain (trace + XLA compile of the
                              seeding + GA programs) vs best-of-N cached
                              drains (the steady-state service number),
-  * requests_per_s         — warm requests/s (each request = a full
+  * requests_per_s         — warm END-TO-END requests/s (submit through
+                             drain wall time; each request = a full
                              P x (G+1) GA search),
-  * designs_per_s          — the same in designs evaluated/s,
+  * busy_requests_per_s    — the busy-only figure (wall time inside
+                             ``engine.execute``; what ``ServiceStats.
+                             requests_per_s`` reports),
+  * wait/latency p50/p99   — per-request queue-wait and submit-to-result
+                             latency percentiles of the recorded warm
+                             drain (``ServiceStats`` samples),
+  * designs_per_s          — the e2e figure in designs evaluated/s,
   * launches / programs    — XLA launches in one drain, and how many NEW
                              seeding/GA programs the drain compiled (the
                              acceptance bound is <= 4; steady state is 0).
 
 ``--smoke`` is the CI serve-smoke leg: ~32 mixed requests at a tiny
-operating point, asserting every result arrives with a finite best score.
-``python -m benchmarks.bench_dse_service`` appends the ``service`` row of
-``experiments/search_throughput.json`` (see benchmarks/README.md for the
-methodology).
+operating point, asserting every result arrives with a finite best
+score — plus an EDF leg (deadline-ordered launches on the sync service)
+and an async leg (mixed-priority ``AsyncDSEService`` drain, futures all
+finite).  ``python -m benchmarks.bench_dse_service`` appends the
+``service`` row of ``experiments/search_throughput.json`` (see
+benchmarks/README.md for the methodology).
 """
 from __future__ import annotations
 
@@ -69,6 +78,7 @@ def run(quick: bool = False, verbose: bool = True, mesh=None,
         t0 = time.time()
         svc = drain(1000 * (rep + 1))
         warm = min(warm, time.time() - t0)
+    st = svc.stats  # per-request telemetry of the last warm drain
     out = {
         "requests": n, "pop": POP, "gens": GENS, "backend": backend,
         "slots": svc.engine.max_slots, "launches": svc.stats.launches,
@@ -76,7 +86,10 @@ def run(quick: bool = False, verbose: bool = True, mesh=None,
         "warm_reps": warm_reps,
         "cold_s": cold,  # includes trace + XLA compile
         "warm_s": warm,  # cached programs: the steady-state number
-        "requests_per_s": n / warm,
+        "requests_per_s": n / warm,  # end-to-end: submit through drain
+        "busy_requests_per_s": st.requests_per_s(),  # execute() wall only
+        "wait_p50_s": st.wait_p(50), "wait_p99_s": st.wait_p(99),
+        "latency_p50_s": st.latency_p(50), "latency_p99_s": st.latency_p(99),
         "designs_per_s": n * per_search / warm,
         "speedup_vs_paper": (n * per_search / warm) * PAPER_S_PER_DESIGN,
         "paper_s_per_design": PAPER_S_PER_DESIGN,
@@ -84,17 +97,41 @@ def run(quick: bool = False, verbose: bool = True, mesh=None,
     if verbose:
         print(f"[dse-service] {n} mixed requests: cold {cold:.2f}s "
               f"({programs} programs), warm {warm:.2f}s -> "
-              f"{n/warm:.1f} req/s, {n*per_search/warm:.0f} designs/s "
+              f"{n/warm:.1f} req/s e2e ({st.requests_per_s():.1f} busy), "
+              f"{n*per_search/warm:.0f} designs/s, latency p50/p99 "
+              f"{st.latency_p(50):.2f}/{st.latency_p(99):.2f}s "
               f"({svc.stats.launches} launches/drain)")
     return out
 
 
-def smoke(n: int = 32) -> int:
-    """CI serve-smoke: submit n mixed requests at a tiny operating point,
-    drain, assert every result is present with a finite best score."""
+def _assert_all_finite(rids, results):
+    missing = [r for r in rids if r not in results]
+    assert not missing, f"requests never completed: {missing}"
     import numpy as np
 
-    from repro.serve.dse import DSEService, paper_request_mix
+    bad = [
+        r for r in rids
+        if not (len(results[r].top_scores)
+                and np.isfinite(results[r].top_scores[0]))
+    ]
+    assert not bad, f"requests with no finite best score: {bad}"
+
+
+def smoke(n: int = 32) -> int:
+    """CI serve-smoke, three legs:
+
+    1. sync fifo  — n mixed requests drained, every result present with
+       a finite best score (the original smoke),
+    2. sync EDF   — the same mix with cycling deadlines at 8 slots:
+       launch order must be exactly earliest-absolute-deadline-first
+       (deadline-less requests last), still all finite,
+    3. async priority — the mixed-PRIORITY mix through AsyncDSEService
+       (paused admission -> one deterministic plan), futures all finite
+       and per-request telemetry recorded.
+    """
+    import numpy as np
+
+    from repro.serve.dse import AsyncDSEService, DSEService, paper_request_mix
     from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
     from repro.workloads.pack import pack_workloads
 
@@ -107,16 +144,44 @@ def smoke(n: int = 32) -> int:
         ws, n, backend="table", pop_size=40, generations=6,
     ))
     results = svc.drain()
-    missing = [r for r in rids if r not in results]
-    assert not missing, f"requests never completed: {missing}"
-    bad = [
-        r for r in rids
-        if not (len(results[r].top_scores)
-                and np.isfinite(results[r].top_scores[0]))
-    ]
-    assert not bad, f"requests with no finite best score: {bad}"
+    _assert_all_finite(rids, results)
     print(f"[dse-service] smoke: {n}/{n} mixed requests drained, "
           f"all finite ({svc.stats.launches} launches)")
+
+    # --- EDF leg: cycling deadlines, 8-slot chunks -> >=4 launches whose
+    # dispatch order must be non-decreasing in absolute deadline
+    deadlines = [5.0, 60.0, 30.0, None]
+    edf = DSEService(policy="edf", max_slots=8)
+    edf_reqs = paper_request_mix(ws, n, backend="table", pop_size=40,
+                                 generations=6, deadlines_s=deadlines)
+    edf_rids = edf.submit_all(edf_reqs)
+    edf_results = edf.drain()
+    _assert_all_finite(edf_rids, edf_results)
+    by_rid = dict(zip(edf_rids, edf_reqs))
+    order = [
+        np.inf if by_rid[rid].deadline_s is None else by_rid[rid].deadline_s
+        for launch in edf.launch_log for rid in launch
+    ]
+    assert order == sorted(order), f"EDF launch order violated: {order}"
+    print(f"[dse-service] smoke: EDF leg ordered {len(edf.launch_log)} "
+          f"launches by deadline, all finite")
+
+    # --- async leg: mixed priorities through the threaded front end;
+    # paused admission keeps it at the sync leg's one 64-slot program
+    with AsyncDSEService(policy="priority", paused=True) as async_svc:
+        futs = async_svc.submit_all(paper_request_mix(
+            ws, n, backend="table", pop_size=40, generations=6,
+            priorities=[3, 0, 1, 2],
+        ))
+        async_svc.resume()
+        async_res = [f.result(timeout=600) for f in futs]
+    assert all(
+        len(r.top_scores) and np.isfinite(r.top_scores[0]) for r in async_res
+    ), "async leg returned a non-finite best score"
+    st = async_svc.stats
+    assert len(st.latency_samples) == n and len(st.wait_samples) == n
+    print(f"[dse-service] smoke: async priority leg {n}/{n} futures "
+          f"finite (latency p99 {st.latency_p(99):.2f}s)")
     return 0
 
 

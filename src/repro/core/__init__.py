@@ -10,8 +10,14 @@
 """
 from repro.core import space  # noqa: F401
 from repro.core.engine import (  # noqa: F401
+    POLICIES,
+    EDFPolicy,
+    PriorityPolicy,
+    RequestMeta,
+    SchedulingPolicy,
     SearchEngine,
     SearchRequest,
+    get_policy,
     plan_batch,
 )
 from repro.core.ga import GAResult, run_ga, run_ga_batched  # noqa: F401

@@ -363,7 +363,14 @@ class SearchRequest:
     keys; service clients usually just pick an integer seed).
     ``obj_weights`` switches the request to the exponent-weighted
     objective; otherwise ``objective`` must be one of
-    ``objectives.OBJECTIVES``."""
+    ``objectives.OBJECTIVES``.
+
+    ``priority`` and ``deadline_s`` are *scheduling metadata*, consumed
+    only by ``plan_batch``'s policy layer (and the service front ends):
+    priority 0 is the most urgent (larger = less urgent) and
+    ``deadline_s`` is seconds-from-submit (the service converts it to an
+    absolute clock deadline at ingest).  Neither enters ``signature()``
+    — scheduling can never change which compiled program a request hits."""
 
     ws: WorkloadSet
     objective: str = "ela"
@@ -377,6 +384,8 @@ class SearchRequest:
     top_k: int = 10
     tech: TechParams = TECH
     init_genomes: Optional[Any] = None  # (pop_size, n); never consumed
+    priority: int = 0  # 0 = most urgent; scheduling-only, not traced
+    deadline_s: Optional[float] = None  # seconds from submit; scheduling-only
 
     def prng_key(self) -> jax.Array:
         return self.key if self.key is not None else jax.random.PRNGKey(self.seed)
@@ -424,25 +433,140 @@ class BatchPlan:
     pad_l: int
 
 
-def plan_batch(
-    requests: Sequence[SearchRequest], *, max_slots: int = 64
-) -> List[BatchPlan]:
-    """Group heterogeneous requests by signature and slot-pack each group.
+# ------------------------------------------------------ scheduling policy
+@dataclasses.dataclass(frozen=True)
+class RequestMeta:
+    """Scheduling facts the policies key on, per queued request.
 
-    Packing policy: a group of ``total`` requests runs in chunks of
+    ``seq`` is the submit order (the FIFO key and the universal
+    tiebreak), ``wait_s`` how long the request has been queued (feeds
+    priority aging), ``deadline_s`` the ABSOLUTE deadline on the
+    scheduler's clock (``None`` = none).  ``plan_batch`` synthesizes
+    defaults (seq = list position, wait 0, ``SearchRequest.deadline_s``
+    read as absolute-from-0) when the caller has no queue state, so
+    driver-path plans stay pure functions of the request list."""
+
+    seq: int
+    priority: int = 0
+    wait_s: float = 0.0
+    deadline_s: Optional[float] = None
+
+
+class SchedulingPolicy:
+    """Maps a queued request to a sortable urgency key (lower = sooner).
+
+    The planner stable-sorts the queue by ``key`` before grouping, so a
+    policy controls both which requests share a chunk and which chunk
+    launches first — while chunking itself (fixed ``slots`` per
+    signature group, padded tail) is untouched: policies can never
+    change which compiled program a request hits, only when it runs."""
+
+    name = "fifo"
+
+    def key(self, req: SearchRequest, meta: RequestMeta) -> tuple:
+        return (meta.seq,)
+
+
+class PriorityPolicy(SchedulingPolicy):
+    """Strict priority (0 = most urgent) with optional aging: a request
+    waiting ``aging_s`` seconds gains one priority level, so any finite
+    priority eventually reaches 0 and launches — the starvation-freedom
+    knob the scheduler sim pins.  ``aging_s=None`` disables aging
+    (pure strict priority; can starve under a hot higher-priority
+    stream)."""
+
+    name = "priority"
+
+    def __init__(self, aging_s: Optional[float] = 30.0):
+        if aging_s is not None and aging_s <= 0:
+            raise ValueError(f"aging_s must be positive or None, got {aging_s}")
+        self.aging_s = aging_s
+
+    def key(self, req: SearchRequest, meta: RequestMeta) -> tuple:
+        p = float(meta.priority)
+        if self.aging_s is not None:
+            p -= meta.wait_s / self.aging_s
+        return (p, meta.seq)
+
+
+class EDFPolicy(SchedulingPolicy):
+    """Earliest-deadline-first: absolute deadline, then submit order;
+    deadline-less requests run after every deadlined one."""
+
+    name = "edf"
+
+    def key(self, req: SearchRequest, meta: RequestMeta) -> tuple:
+        d = float("inf") if meta.deadline_s is None else float(meta.deadline_s)
+        return (d, meta.seq)
+
+
+POLICIES = {"fifo": SchedulingPolicy, "priority": PriorityPolicy, "edf": EDFPolicy}
+
+
+def get_policy(policy) -> SchedulingPolicy:
+    """Accepts a policy name or an already-built ``SchedulingPolicy``."""
+    if isinstance(policy, SchedulingPolicy):
+        return policy
+    cls = POLICIES.get(policy)
+    if cls is None:
+        raise ValueError(f"policy must be one of {tuple(POLICIES)} or a "
+                         f"SchedulingPolicy, got {policy!r}")
+    return cls()
+
+
+def plan_batch(
+    requests: Sequence[SearchRequest],
+    *,
+    max_slots: int = 64,
+    policy="fifo",
+    meta: Optional[Sequence[RequestMeta]] = None,
+    slot_hints: Optional[Dict[tuple, int]] = None,
+) -> List[BatchPlan]:
+    """Group heterogeneous requests by signature and slot-pack each group,
+    ordered by the scheduling policy.
+
+    Packing: a group of ``total`` requests runs in chunks of
     ``slots = min(total, max_slots)`` — a single exact-size launch when it
     fits (no pad waste on the hot driver paths), fixed ``max_slots``-row
     chunks when it doesn't (the last chunk padded), so a 256-request drain
-    is 4 launches of ONE compiled program."""
+    is 4 launches of ONE compiled program.  ``slot_hints`` (signature ->
+    previously-used slot count) rounds a smaller group UP to a known-warm
+    program size instead of compiling an exact-size one — the service's
+    fixed-slot steady state; hints never shrink a chunk below its natural
+    size.
+
+    Policy (fifo / priority / edf, or any ``SchedulingPolicy``): the
+    queue is stable-sorted by urgency key before grouping, members of a
+    chunk are key-ordered, and the emitted plan list is key-ordered by
+    each plan's most urgent member — so ``plans[0]`` is always the launch
+    the policy wants next.  One fairness caveat is inherent to
+    slot-packing: a less urgent request that shares a signature with an
+    urgent one may ride along in its chunk (free slots cost nothing),
+    so cross-GROUP order is policy order, within-chunk admission is
+    policy order + free capacity.  ``meta`` (per-request queue facts:
+    submit order, wait, absolute deadline) comes from the service; bare
+    calls synthesize it from the request fields."""
+    pol = get_policy(policy)
+    if meta is None:
+        meta = [
+            RequestMeta(seq=i, priority=int(r.priority), wait_s=0.0,
+                        deadline_s=r.deadline_s)
+            for i, r in enumerate(requests)
+        ]
+    keys = [pol.key(r, m) for r, m in zip(requests, meta)]
+    order = sorted(range(len(requests)), key=keys.__getitem__)
     groups: Dict[tuple, List[int]] = {}
-    for i, r in enumerate(requests):
-        groups.setdefault(r.signature(), []).append(i)
+    for i in order:
+        groups.setdefault(requests[i].signature(), []).append(i)
     plans: List[BatchPlan] = []
     for sig, idxs in groups.items():
         reqs = [requests[i] for i in idxs]
         pad_w = max(int(r.ws.feats.shape[0]) for r in reqs)
         pad_l = max(int(r.ws.feats.shape[1]) for r in reqs)
         slots = min(len(idxs), int(max_slots))
+        hint = (slot_hints or {}).get(sig)
+        if hint is not None and slots < hint <= int(max_slots):
+            slots = hint  # round up to the warm program size, never down
         for lo in range(0, len(idxs), slots):
             plans.append(BatchPlan(
                 signature=sig,
@@ -452,6 +576,9 @@ def plan_batch(
                 pad_w=pad_w,
                 pad_l=pad_l,
             ))
+    # most urgent plan first: group members are key-sorted, so a plan's
+    # urgency is its first member's key
+    plans.sort(key=lambda p: keys[p.indices[0]])
     return plans
 
 

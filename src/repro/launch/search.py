@@ -24,9 +24,18 @@ tables free at search time.
 workload set) are submitted to the continuous-batching queue
 (``serve.dse.DSEService``) and drained slot-packed through the shared
 search engine — the per-request best designs stream as each launch
-lands, followed by a requests/s summary:
+lands, followed by a requests/s + latency-percentile summary:
 
     python -m repro.launch.search --serve 256 --backend table
+
+``--serve-policy priority|edf`` schedules the queue by request priority
+(0 = most urgent, wait-time aging) or earliest absolute deadline, and
+``--serve-async`` drains through the threaded ``AsyncDSEService`` front
+end (``submit`` returns futures; requests join the next launch without
+blocking the current one):
+
+    python -m repro.launch.search --serve 256 --backend table \
+        --serve-policy priority --serve-async
 """
 from __future__ import annotations
 
@@ -68,28 +77,61 @@ def build_workloads(args) -> WorkloadSet:
 
 
 def serve(args, ws: WorkloadSet, mesh) -> int:
-    """``--serve N``: drain N mixed requests through the DSE service."""
-    from repro.serve.dse import DSEService, paper_request_mix
+    """``--serve N``: drain N mixed requests through the DSE service.
+    ``--serve-policy`` picks the scheduling policy (mixed priorities /
+    deadlines are cycled into the request mix so the policy has work to
+    do); ``--serve-async`` drains through the threaded
+    ``AsyncDSEService`` front end instead of the synchronous queue."""
+    from repro.serve.dse import AsyncDSEService, DSEService, paper_request_mix
 
-    svc = DSEService(mesh=mesh)
-    svc.submit_all(paper_request_mix(
+    mix_kw = {}
+    if args.serve_policy == "priority":
+        mix_kw["priorities"] = [3, 0, 1, 2]
+    elif args.serve_policy == "edf":
+        mix_kw["deadlines_s"] = [5.0, 60.0, 30.0, None]
+    reqs = paper_request_mix(
         ws, args.serve, backend=args.backend, pop_size=args.pop,
-        generations=args.gens, area_constr=args.area,
-    ))
-    print(f"[serve] {args.serve} heterogeneous requests queued "
-          f"(backend={args.backend}, slots={svc.engine.max_slots})")
-    t0 = time.time()
+        generations=args.gens, area_constr=args.area, **mix_kw,
+    )
     results = {}
-    for rid, res in svc.stream():
-        results[rid] = res
-        best = f"{res.top_scores[0]:.4g}" if len(res.top_scores) else "infeasible"
-        print(f"[serve] rid {rid}: {res.objective} on "
-              f"{','.join(res.workload_names)} -> best={best}")
+    t0 = time.time()
+    if args.serve_async:
+        with AsyncDSEService(mesh=mesh, policy=args.serve_policy) as svc:
+            futs = svc.submit_all(reqs)
+            print(f"[serve] {args.serve} heterogeneous requests submitted "
+                  f"async (policy={args.serve_policy}, "
+                  f"backend={args.backend}, "
+                  f"slots={svc.service.engine.max_slots})")
+            for fut in futs:
+                res = fut.result()
+                results[fut.rid] = res
+                best = (f"{res.top_scores[0]:.4g}" if len(res.top_scores)
+                        else "infeasible")
+                print(f"[serve] rid {fut.rid}: {res.objective} on "
+                      f"{','.join(res.workload_names)} -> best={best}")
+        stats = svc.stats
+    else:
+        svc = DSEService(mesh=mesh, policy=args.serve_policy)
+        svc.submit_all(reqs)
+        print(f"[serve] {args.serve} heterogeneous requests queued "
+              f"(policy={args.serve_policy}, backend={args.backend}, "
+              f"slots={svc.engine.max_slots})")
+        for rid, res in svc.stream():
+            results[rid] = res
+            best = (f"{res.top_scores[0]:.4g}" if len(res.top_scores)
+                    else "infeasible")
+            print(f"[serve] rid {rid}: {res.objective} on "
+                  f"{','.join(res.workload_names)} -> best={best}")
+        stats = svc.stats
     dt = time.time() - t0
     n_evald = args.serve * args.pop * (args.gens + 1)
     print(f"[serve] drained {len(results)} requests in {dt:.1f}s "
           f"({len(results)/dt:.1f} req/s, {n_evald/dt:.0f} designs/s, "
-          f"{svc.stats.launches} launches)")
+          f"{stats.launches} launches, wait p50/p99 "
+          f"{stats.wait_p(50):.2f}/{stats.wait_p(99):.2f}s, "
+          f"latency p50/p99 {stats.latency_p(50):.2f}/"
+          f"{stats.latency_p(99):.2f}s, "
+          f"{stats.deadline_misses} deadline misses)")
     if args.out:
         payload = [
             {
@@ -136,6 +178,16 @@ def main(argv=None) -> int:
         help="run the continuous-batching DSE service on N heterogeneous "
              "requests (mixed workload subsets / objectives / seeds) "
              "instead of the one-off joint search",
+    )
+    ap.add_argument(
+        "--serve-policy", default="fifo", choices=["fifo", "priority", "edf"],
+        help="--serve scheduling policy; priority/edf cycle mixed "
+             "priorities / deadlines into the request mix",
+    )
+    ap.add_argument(
+        "--serve-async", action="store_true",
+        help="drain --serve through the threaded AsyncDSEService front "
+             "end (submit returns futures) instead of the sync queue",
     )
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)

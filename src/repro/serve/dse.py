@@ -17,45 +17,125 @@ through the shared ``core.engine.SearchEngine``:
   * ``stream``  — generator form of drain: yields (rid, SearchResult) per
     completed plan, so callers consume results while later plans run.
 
+Scheduling is policy-driven (``core.engine.SchedulingPolicy``): ``fifo``
+(submit order), ``priority`` (``SearchRequest.priority``, 0 = most
+urgent, with wait-time aging so nothing starves) or ``edf``
+(``SearchRequest.deadline_s`` seconds-from-submit, converted to an
+absolute deadline on the service clock at ingest).  The policy reorders
+the queue and the launch order; it never changes which compiled program
+a request hits, nor any result bit (every search is self-contained).
+
+``AsyncDSEService`` runs the same service behind a worker thread:
+``submit`` returns a ``concurrent.futures.Future`` immediately, requests
+submitted while a launch is in flight join the NEXT launch's packing
+(the dispatch/complete split below holds the lock only around queue
+surgery, never around ``engine.execute``), and an urgent submission
+therefore preempts all still-queued work at the next launch boundary.
+
 Because the ``table`` backend's traced ctx is layer-free, requests over
 *different* workload sets share one compiled program: 256 mixed requests
 (subsets x objectives x seeds) drain through 4 launches of 2 cached
 programs, bit-identical to running each request alone
 (tests/test_engine.py).  ``mesh=`` lays every launch over the 2-D
 (search, population) device mesh.
+
+``ServiceStats`` tracks busy time plus per-request queue-wait and
+end-to-end latency samples (the telemetry deadline policies need) and
+deadline misses; ``tests/sim_scheduler.py`` drives all of the above
+against a virtual clock and a stub engine, so every scheduling claim is
+asserted without an XLA launch.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from collections import deque
+from concurrent.futures import Future
+from typing import Deque, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.engine import (
     BatchPlan,
+    RequestMeta,
     SearchEngine,
     SearchRequest,
     SearchResult,
+    get_policy,
     plan_batch,
 )
 from repro.core.objectives import OBJECTIVES
 from repro.workloads.pack import WorkloadSet
 
 
+def _percentile(samples: Sequence[float], q: float) -> float:
+    if not samples:
+        return float("nan")
+    return float(np.percentile(np.asarray(samples, np.float64), q))
+
+
+# Per-request samples kept for percentile telemetry: a bounded recent
+# window (deque maxlen), so a long-lived service's memory stays O(1) and
+# the percentiles describe recent traffic rather than all-time history.
+SAMPLE_WINDOW = 4096
+LAUNCH_LOG_WINDOW = 4096
+
+
 @dataclasses.dataclass
 class ServiceStats:
-    """Running drain telemetry (the bench's requests/s row reads these)."""
+    """Running drain telemetry (the bench's requests/s row reads these).
+
+    ``busy_s`` is wall time inside ``engine.execute`` only —
+    ``requests_per_s`` is therefore a BUSY throughput, not an end-to-end
+    one.  ``wait_samples`` (dispatch - submit) and ``latency_samples``
+    (complete - submit) are per-request, on the service clock, bounded
+    to the most recent ``SAMPLE_WINDOW`` completions, so
+    ``wait_p``/``latency_p`` percentiles describe what clients recently
+    experienced; ``deadline_misses`` counts requests completed after
+    their absolute deadline (any policy — EDF just minimizes it).
+    After an engine failure ``submitted`` stays ahead of ``completed``:
+    failed requests are never counted as served."""
 
     submitted: int = 0
     completed: int = 0
     launches: int = 0
     busy_s: float = 0.0  # wall time spent inside execute()
+    deadline_misses: int = 0
+    wait_samples: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=SAMPLE_WINDOW))
+    latency_samples: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=SAMPLE_WINDOW))
 
     def requests_per_s(self) -> float:
         return self.completed / self.busy_s if self.busy_s > 0 else 0.0
 
+    def wait_p(self, q: float) -> float:
+        """Queue-wait percentile in seconds (q in [0, 100])."""
+        return _percentile(self.wait_samples, q)
+
+    def latency_p(self, q: float) -> float:
+        """End-to-end (submit -> complete) latency percentile in seconds."""
+        return _percentile(self.latency_samples, q)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests_per_s": self.requests_per_s(),
+            "wait_p50_s": self.wait_p(50), "wait_p99_s": self.wait_p(99),
+            "latency_p50_s": self.latency_p(50),
+            "latency_p99_s": self.latency_p(99),
+            "deadline_misses": self.deadline_misses,
+        }
+
 
 class DSEService:
-    """Continuous-batching front end over a ``SearchEngine``."""
+    """Continuous-batching front end over a ``SearchEngine``.
+
+    ``policy`` is a name (fifo / priority / edf) or a
+    ``SchedulingPolicy`` instance; ``clock`` (default ``time.monotonic``)
+    is the ONLY time source — submit stamps, waits, deadlines and busy
+    time all read it, so a virtual clock makes every scheduling decision
+    and every stat deterministic (tests/sim_scheduler.py)."""
 
     def __init__(
         self,
@@ -63,12 +143,25 @@ class DSEService:
         engine: Optional[SearchEngine] = None,
         mesh=None,
         max_slots: int = 64,
+        policy="fifo",
+        clock=time.monotonic,
     ):
         self.engine = engine or SearchEngine(mesh=mesh, max_slots=max_slots)
+        self.policy = get_policy(policy)
+        self.clock = clock
         self.queue: List[Tuple[int, SearchRequest]] = []
         self.results: Dict[int, SearchResult] = {}
         self.stats = ServiceStats()
+        self.launch_log: List[List[int]] = []  # rids per launch, in order
         self._next_rid = 0
+        # per-rid queue facts: submit stamp + absolute deadline (clock() +
+        # SearchRequest.deadline_s at ingest) — what the policy keys on
+        self._submit_s: Dict[int, float] = {}
+        self._deadline_s: Dict[int, Optional[float]] = {}
+        # signature -> slot size of the last plan that used it: re-plans
+        # (mid-drain submits) round small residues UP to this warm program
+        # size instead of compiling an exact-size one
+        self._slot_hints: Dict[tuple, int] = {}
         # plans for the current queue snapshot; invalidated on submit so
         # a quiescent drain keeps plan_batch's padded-tail chunking (every
         # chunk of a group = ONE compiled program) instead of re-planning
@@ -85,9 +178,14 @@ class DSEService:
         req.signature()
         if req.backend == "table":
             req.ws.tables(req.tech)  # fingerprint-memoized ingest prefill
+        now = self.clock()
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append((rid, req))
+        self._submit_s[rid] = now
+        self._deadline_s[rid] = (
+            None if req.deadline_s is None else now + float(req.deadline_s)
+        )
         self.stats.submitted += 1
         self._plans_cache = None  # next step re-packs the grown queue
         return rid
@@ -103,39 +201,111 @@ class DSEService:
         """Plans over the current queue snapshot, cached across steps: a
         drain executes the ONE padded chunking plan_batch produced (plan
         indices refer to the snapshot), and only a new submission forces
-        a re-pack — so a group's ragged tail launches as the same padded
-        program as its full chunks rather than compiling a fresh
-        residual-size program."""
+        a re-pack — where the slot hints keep re-planned residues on the
+        warm program shapes."""
         if self._plans_cache is None:
+            now = self.clock()
             self._snapshot = list(self.queue)
+            meta = [
+                RequestMeta(
+                    seq=rid,
+                    priority=int(r.priority),
+                    wait_s=now - self._submit_s[rid],
+                    deadline_s=self._deadline_s[rid],
+                )
+                for rid, r in self._snapshot
+            ]
             self._plans_cache = plan_batch(
-                [r for _, r in self._snapshot], max_slots=self.engine.max_slots
+                [r for _, r in self._snapshot],
+                max_slots=self.engine.max_slots,
+                policy=self.policy,
+                meta=meta,
+                slot_hints=self._slot_hints,
             )
+            for p in self._plans_cache:
+                self._slot_hints[p.signature] = p.slots
         return self._plans_cache
 
-    def step(self) -> List[Tuple[int, SearchResult]]:
-        """Run ONE slot-packed launch (the first plan of the current
-        queue); returns that plan's (rid, result) pairs.  Requests
-        submitted while a step runs simply join the next plan."""
+    def _dispatch(self) -> Optional[Tuple[BatchPlan, List[int], float]]:
+        """Pick the policy's next plan and remove its requests from the
+        queue — the admission point: everything still queued after this
+        (including anything submitted while the launch runs) is free to
+        re-plan.  Returns (plan, rids, dispatch stamp); pure queue
+        surgery, no device work, so the async front end holds its lock
+        only across this and ``_complete``."""
         if not self.queue:
-            return []
+            return None
         plans = self._plans()
         plan = plans.pop(0)
         if not plans:
             self._plans_cache = None
-        t0 = time.time()
-        results = self.engine.execute(plan)
-        self.stats.busy_s += time.time() - t0
-        self.stats.launches += 1
-        done: List[Tuple[int, SearchResult]] = []
-        for qi, res in zip(plan.indices, results):
-            rid = self._snapshot[qi][0]
-            self.results[rid] = res
-            done.append((rid, res))
-        taken = {rid for rid, _ in done}
+        rids = [self._snapshot[qi][0] for qi in plan.indices]
+        taken = set(rids)
         self.queue = [q for q in self.queue if q[0] not in taken]
+        now = self.clock()
+        for rid in rids:
+            self.stats.wait_samples.append(now - self._submit_s[rid])
+        return plan, rids, now
+
+    def _drop_wait_samples(self, n: int) -> None:
+        for _ in range(min(n, len(self.stats.wait_samples))):
+            self.stats.wait_samples.pop()  # newest = this dispatch's
+
+    def _rollback(self, plan: BatchPlan, rids: List[int]) -> None:
+        """Undo a dispatch whose launch failed (sync path): the requests
+        return to the queue with their original submit stamps intact —
+        ``step()`` stays retryable — and the dispatch's wait samples are
+        dropped (the requests were never served)."""
+        self._drop_wait_samples(len(rids))
+        self.queue = list(zip(rids, plan.requests)) + self.queue
+        self._plans_cache = None  # the popped plan list is now stale
+
+    def _abandon(self, rids: List[int]) -> None:
+        """Drop failed in-flight requests for good (async path: their
+        futures carry the exception): purge per-rid bookkeeping so a
+        long-lived worker that survives engine failures leaks nothing
+        and keeps wait/latency sample counts consistent."""
+        self._drop_wait_samples(len(rids))
+        for rid in rids:
+            self._submit_s.pop(rid, None)
+            self._deadline_s.pop(rid, None)
+
+    def _complete(
+        self, rids: List[int], results: Sequence[SearchResult], busy_s: float
+    ) -> List[Tuple[int, SearchResult]]:
+        """Record one finished launch: results, latency/deadline stats."""
+        now = self.clock()
+        self.stats.busy_s += busy_s
+        self.stats.launches += 1
+        self.launch_log.append(list(rids))
+        if len(self.launch_log) > LAUNCH_LOG_WINDOW:
+            del self.launch_log[: len(self.launch_log) - LAUNCH_LOG_WINDOW]
+        done: List[Tuple[int, SearchResult]] = []
+        for rid, res in zip(rids, results):
+            self.results[rid] = res
+            self.stats.latency_samples.append(now - self._submit_s[rid])
+            dl = self._deadline_s.pop(rid, None)
+            self._submit_s.pop(rid, None)
+            if dl is not None and now > dl:
+                self.stats.deadline_misses += 1
+            done.append((rid, res))
         self.stats.completed += len(done)
         return done
+
+    def step(self) -> List[Tuple[int, SearchResult]]:
+        """Run ONE slot-packed launch (the policy's most urgent plan of
+        the current queue); returns that plan's (rid, result) pairs.
+        Requests submitted while a step runs simply join the next plan."""
+        d = self._dispatch()
+        if d is None:
+            return []
+        plan, rids, t0 = d
+        try:
+            results = self.engine.execute(plan)
+        except BaseException:
+            self._rollback(plan, rids)  # step() stays retryable
+            raise
+        return self._complete(rids, results, self.clock() - t0)
 
     def stream(self) -> Iterator[Tuple[int, SearchResult]]:
         """Drain, yielding each plan's results as soon as its launch
@@ -152,6 +322,159 @@ class DSEService:
         return self.results
 
 
+class AsyncDSEService:
+    """Non-blocking front end: a worker thread drains a ``DSEService``.
+
+    ``submit`` enqueues and returns a ``concurrent.futures.Future``
+    immediately — it never waits on a launch in flight, because the
+    worker holds the service lock only around ``_dispatch``/``_complete``
+    (queue surgery), never around ``engine.execute``.  A request
+    submitted mid-launch therefore joins the NEXT launch's packing, and
+    under the priority/edf policies an urgent submission preempts every
+    still-queued request at that boundary (the re-plan runs on warm
+    program shapes via the service's slot hints — 0 new compiled
+    programs).
+
+    Future results are ``SearchResult``s, bit-identical to a synchronous
+    ``DSEService`` drain of the same requests: scheduling only reorders
+    self-contained searches.  Futures resolve on the worker thread, so a
+    done-callback runs BEFORE the next dispatch — a deterministic hook
+    for reacting mid-drain (the integration test submits its priority-0
+    jump there).  ``paused=True`` admits submissions without launching
+    until ``resume()`` — batch admission with a deterministic first plan.
+    Use as a context manager, or call ``close()``."""
+
+    def __init__(
+        self,
+        *,
+        engine: Optional[SearchEngine] = None,
+        mesh=None,
+        max_slots: int = 64,
+        policy="fifo",
+        clock=time.monotonic,
+        paused: bool = False,
+    ):
+        self.service = DSEService(
+            engine=engine, mesh=mesh, max_slots=max_slots, policy=policy,
+            clock=clock,
+        )
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._idle = threading.Event()
+        self._idle.set()
+        self._run = threading.Event()
+        if not paused:
+            self._run.set()
+        self._futures: Dict[int, Future] = {}
+        self._closed = False
+        self._worker = threading.Thread(
+            target=self._loop, name="dse-service", daemon=True
+        )
+        self._worker.start()
+
+    @property
+    def stats(self) -> ServiceStats:
+        return self.service.stats
+
+    @property
+    def launch_log(self) -> List[List[int]]:
+        return self.service.launch_log
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: SearchRequest) -> Future:
+        """Enqueue; returns a Future resolving to the SearchResult.
+        Never blocks on device work — at most the queue lock."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("AsyncDSEService is closed")
+            rid = self.service.submit(req)
+            fut: Future = Future()
+            fut.rid = rid  # type: ignore[attr-defined]
+            self._futures[rid] = fut
+            self._idle.clear()
+        self._wake.set()
+        return fut
+
+    def submit_all(self, reqs: Sequence[SearchRequest]) -> List[Future]:
+        return [self.submit(r) for r in reqs]
+
+    def pause(self):
+        """Stop launching at the next launch boundary (in-flight work
+        finishes); submissions keep queueing."""
+        self._run.clear()
+
+    def resume(self):
+        self._run.set()
+        self._wake.set()
+
+    # --------------------------------------------------------------- serving
+    def _loop(self):
+        while True:
+            self._wake.wait()
+            self._run.wait()
+            with self._lock:
+                if self._closed:
+                    return
+                d = self.service._dispatch()
+                if d is None:
+                    self._wake.clear()
+                    if not self._futures:
+                        self._idle.set()
+                    continue
+                plan, rids, t0 = d
+            # the launch runs WITHOUT the lock: submits land concurrently
+            # and join the next dispatch's re-plan
+            try:
+                results = self.service.engine.execute(plan)
+            except BaseException as e:  # noqa: BLE001 — fail the futures, keep serving
+                with self._lock:
+                    self.service._abandon(rids)
+                    failed = [self._futures.pop(rid, None) for rid in rids]
+                # exceptions set OUTSIDE the lock: done-callbacks fire on
+                # failure too, and they may submit (which takes the lock)
+                for f in failed:
+                    if f is not None:
+                        f.set_exception(e)
+                continue
+            with self._lock:
+                done = self.service._complete(
+                    rids, results, self.service.clock() - t0
+                )
+                futs = [(self._futures.pop(rid, None), res) for rid, res in done]
+            # resolve OUTSIDE the lock: done-callbacks may submit
+            for f, res in futs:
+                if f is not None:
+                    f.set_result(res)
+
+    def drain(self, timeout: Optional[float] = None) -> Dict[int, SearchResult]:
+        """Block until the queue and all in-flight launches are done;
+        returns the service's full {rid: result} map."""
+        if not self._idle.wait(timeout):
+            raise TimeoutError(
+                f"drain timed out with {self.service.pending()} queued"
+            )
+        return self.service.results
+
+    def close(self):
+        """Finish in-flight work, then stop the worker."""
+        if self._run.is_set():
+            self.drain()
+        with self._lock:
+            self._closed = True
+        self._run.set()
+        self._wake.set()
+        self._worker.join()
+        for f in self._futures.values():  # paused close: never launched
+            f.cancel()
+        self._futures.clear()
+
+    def __enter__(self) -> "AsyncDSEService":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
 def paper_request_mix(
     ws: WorkloadSet,
     n: int,
@@ -161,11 +484,15 @@ def paper_request_mix(
     generations: int = 10,
     area_constr: float = 150.0,
     seed0: int = 0,
+    priorities: Optional[Sequence[int]] = None,
+    deadlines_s: Optional[Sequence[Optional[float]]] = None,
 ) -> List[SearchRequest]:
     """N heterogeneous requests over ``ws``: cycles through workload
     subsets (full set, singles, pairs) x objective kinds x seeds — the
     service's canonical mixed traffic (bench_dse_service, the CI
-    serve-smoke leg, ``launch.search --serve``)."""
+    serve-smoke leg, ``launch.search --serve``).  ``priorities`` /
+    ``deadlines_s`` cycle the same way, for mixed-priority / EDF
+    traffic (the async smoke + scheduler tests)."""
     W = ws.n
     subsets = [tuple(range(W))]
     subsets += [(i,) for i in range(W)]
@@ -179,6 +506,9 @@ def paper_request_mix(
             backend=backend,
             pop_size=pop_size,
             generations=generations,
+            priority=0 if priorities is None else int(priorities[i % len(priorities)]),
+            deadline_s=None if deadlines_s is None
+            else deadlines_s[i % len(deadlines_s)],
         )
         for i in range(n)
     ]

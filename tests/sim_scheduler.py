@@ -1,0 +1,226 @@
+"""Deterministic scheduler simulation harness for the DSE service.
+
+Everything the async/priority front end claims about *scheduling* —
+policy ordering, starvation-freedom under aging, deadline-miss
+accounting, mid-drain preemption — is a host-side property of
+``plan_batch`` + ``DSEService``, independent of XLA.  This harness makes
+those claims assertable without a single device launch:
+
+  * ``VirtualClock``  — the service's only time source; tests advance it
+    explicitly, so waits, deadlines and latency stats are exact numbers,
+    not wall-clock noise.
+  * ``StubEngine``    — duck-types ``SearchEngine.execute``: returns a
+    ``SimResult`` per real request (echoing seed/names, so every rid can
+    be checked against its own request), advances the clock by a
+    scripted per-launch duration, and records each launch.
+  * ``sim_service``   — a ``DSEService`` wired to both.
+  * ``run_script``    — drives a scripted submit / advance / step
+    interleaving and returns the completion record.
+
+Workload sets are tiny host-numpy ``WorkloadSet``s (``sim_ws``) on the
+``jnp`` backend, so nothing here ever touches a device; the real-engine
+twin of these assertions lives in tests/test_engine.py.
+
+Used by tests/test_scheduler_sim.py (run in both the 1-device and
+fake-8-device CI jobs — the harness is device-count-independent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.engine import BatchPlan, SearchRequest
+from repro.serve.dse import DSEService
+from repro.workloads.pack import WorkloadSet
+
+
+class VirtualClock:
+    """Monotonic clock a test advances by hand.  Pass as the service's
+    ``clock=``; every submit stamp, wait, deadline and busy figure then
+    reads simulated seconds."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0, f"clock can only move forward, got {dt}"
+        self.t += float(dt)
+        return self.t
+
+
+def sim_ws(w: int = 1, l: int = 2, tag: str = "sim") -> WorkloadSet:
+    """A tiny host-numpy workload set (never evaluated by the stub)."""
+    return WorkloadSet(
+        names=tuple(f"{tag}{i}" for i in range(w)),
+        feats=np.ones((w, l, 6), np.float32),
+        mask=np.ones((w, l), bool),
+    )
+
+
+_WS = sim_ws()
+
+
+def sim_request(
+    seed: int = 0,
+    *,
+    priority: int = 0,
+    deadline_s: Optional[float] = None,
+    ws: Optional[WorkloadSet] = None,
+    pop_size: int = 8,
+    generations: int = 2,
+) -> SearchRequest:
+    """A real ``SearchRequest`` on the ``jnp`` backend (no table prefill
+    at submit) over a host-only workload set."""
+    return SearchRequest(
+        ws=ws if ws is not None else _WS,
+        seed=seed,
+        backend="jnp",
+        pop_size=pop_size,
+        generations=generations,
+        priority=priority,
+        deadline_s=deadline_s,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Stands in for a SearchResult; echoes enough of the request that a
+    test can assert every rid got the result of ITS OWN request."""
+
+    seed: int
+    workload_names: Tuple[str, ...]
+    priority: int
+
+
+@dataclasses.dataclass
+class SimLaunch:
+    """One recorded StubEngine launch."""
+
+    seeds: List[int]  # real requests only, slot order
+    slots: int
+    signature: tuple
+    start_s: float
+    end_s: float
+
+
+class StubEngine:
+    """Duck-types the half of ``SearchEngine`` the service consumes:
+    ``max_slots`` and ``execute(plan)``.  Each execute advances the
+    virtual clock by ``launch_s`` (a constant, or a callable of the
+    plan — scripted heterogeneous launch times) and logs the launch."""
+
+    def __init__(
+        self,
+        clock: VirtualClock,
+        *,
+        max_slots: int = 4,
+        launch_s: Union[float, Callable[[BatchPlan], float]] = 1.0,
+    ):
+        self.clock = clock
+        self.max_slots = int(max_slots)
+        self.launch_s = launch_s
+        self.launches: List[SimLaunch] = []
+
+    def execute(self, plan: BatchPlan, *, mesh=None) -> List[SimResult]:
+        t0 = self.clock()
+        dt = self.launch_s(plan) if callable(self.launch_s) else self.launch_s
+        self.clock.advance(dt)
+        self.launches.append(SimLaunch(
+            seeds=[r.seed for r in plan.requests],
+            slots=plan.slots,
+            signature=plan.signature,
+            start_s=t0,
+            end_s=self.clock(),
+        ))
+        return [
+            SimResult(seed=r.seed, workload_names=r.ws.names,
+                      priority=r.priority)
+            for r in plan.requests
+        ]
+
+
+def sim_service(
+    *,
+    policy="fifo",
+    max_slots: int = 4,
+    launch_s: Union[float, Callable[[BatchPlan], float]] = 1.0,
+    t0: float = 0.0,
+) -> Tuple[DSEService, VirtualClock, StubEngine]:
+    clock = VirtualClock(t0)
+    stub = StubEngine(clock, max_slots=max_slots, launch_s=launch_s)
+    svc = DSEService(engine=stub, policy=policy, clock=clock)
+    return svc, clock, stub
+
+
+# --------------------------------------------------------------- scripting
+# Event grammar (deterministic interleavings, executed in list order):
+#   ("submit", SearchRequest)  -> enqueue; records the rid
+#   ("advance", dt)            -> move the virtual clock
+#   ("step",)                  -> one launch (no-op on an empty queue)
+#   ("drain",)                 -> step until empty
+Event = tuple
+
+
+@dataclasses.dataclass
+class SimTrace:
+    """What a script produced, in order."""
+
+    rids: List[int]  # rid per submit event, in script order
+    completions: List[Tuple[int, SimResult, float]]  # (rid, result, t_done)
+
+    def completion_order(self) -> List[int]:
+        return [rid for rid, _, _ in self.completions]
+
+    def result(self, rid: int) -> SimResult:
+        return next(res for r, res, _ in self.completions if r == rid)
+
+    def done_at(self, rid: int) -> float:
+        return next(t for r, _, t in self.completions if r == rid)
+
+
+def run_script(svc: DSEService, clock: VirtualClock,
+               events: Sequence[Event]) -> SimTrace:
+    trace = SimTrace(rids=[], completions=[])
+
+    def record(done):
+        for rid, res in done:
+            trace.completions.append((rid, res, clock()))
+
+    for ev in events:
+        kind = ev[0]
+        if kind == "submit":
+            trace.rids.append(svc.submit(ev[1]))
+        elif kind == "advance":
+            clock.advance(ev[1])
+        elif kind == "step":
+            record(svc.step())
+        elif kind == "drain":
+            while svc.pending():
+                record(svc.step())
+        else:
+            raise ValueError(f"unknown sim event {ev!r}")
+    return trace
+
+
+def submit_burst(
+    svc: DSEService,
+    n: int,
+    *,
+    priorities: Sequence[int] = (0,),
+    deadlines_s: Sequence[Optional[float]] = (None,),
+    seed0: int = 0,
+) -> List[int]:
+    """n sim requests cycling priorities/deadlines; returns rids."""
+    pr = itertools.cycle(priorities)
+    dl = itertools.cycle(deadlines_s)
+    return [
+        svc.submit(sim_request(seed0 + i, priority=next(pr),
+                               deadline_s=next(dl)))
+        for i in range(n)
+    ]

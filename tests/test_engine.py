@@ -5,6 +5,8 @@ mixing workload sets, objectives, areas, seeds and backends must return
 BIT-IDENTICAL scores and top designs vs running each request alone
 (``run_search``), including under the fake-8-device (search, population)
 mesh, and a 256-request drain must compile at most 4 programs."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -20,7 +22,7 @@ from repro.core.engine import (
 )
 from repro.core.objectives import OBJECTIVES
 from repro.core.search import run_search
-from repro.serve.dse import DSEService, paper_request_mix
+from repro.serve.dse import AsyncDSEService, DSEService, paper_request_mix
 from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
 from repro.workloads.pack import _TABLES_MEMO, pack_workloads
 
@@ -105,6 +107,69 @@ def test_request_validation(ws):
         SearchRequest(ws=ws, objective="nope").signature()
     with pytest.raises(ValueError, match="backend"):
         SearchRequest(ws=ws, backend="nope").signature()
+
+
+def test_scheduling_fields_never_touch_the_signature(ws):
+    """priority/deadline_s are scheduling metadata: they must not change
+    which compiled program a request hits."""
+    base = SearchRequest(ws=ws, backend="table", pop_size=POP,
+                         generations=GENS)
+    urgent = SearchRequest(ws=ws, backend="table", pop_size=POP,
+                           generations=GENS, priority=0, deadline_s=0.5)
+    lazy = SearchRequest(ws=ws, backend="table", pop_size=POP,
+                         generations=GENS, priority=9)
+    assert base.signature() == urgent.signature() == lazy.signature()
+
+
+def test_plan_batch_priority_policy_orders_requests_and_plans(ws):
+    reqs = [SearchRequest(ws=ws.subset([i % 4]), seed=i, backend="table",
+                          pop_size=POP, generations=GENS, priority=5 - i)
+            for i in range(6)]  # priorities 5,4,3,2,1,0
+    plans = plan_batch(reqs, policy="priority", max_slots=2)
+    flat = [i for p in plans for i in p.indices]
+    assert flat == [5, 4, 3, 2, 1, 0]  # most urgent first, chunked 2 by 2
+    assert sorted(flat) == list(range(6))  # exact partition
+    # fifo on the same mix keeps submit order
+    assert [i for p in plan_batch(reqs, max_slots=2) for i in p.indices] \
+        == list(range(6))
+
+
+def test_plan_batch_edf_policy_deadlines_first(ws):
+    reqs = [
+        SearchRequest(ws=ws, seed=0, backend="table", pop_size=POP,
+                      generations=GENS),  # deadline-less -> last
+        SearchRequest(ws=ws, seed=1, backend="table", pop_size=POP,
+                      generations=GENS, deadline_s=9.0),
+        SearchRequest(ws=ws, seed=2, backend="table", pop_size=POP,
+                      generations=GENS, deadline_s=2.0),
+    ]
+    plans = plan_batch(reqs, policy="edf", max_slots=1)
+    assert [p.indices[0] for p in plans] == [2, 1, 0]
+
+
+def test_plan_batch_policy_keeps_chunk_shapes(ws):
+    """A policy reorders requests across chunks but the (signature,
+    slots) launch shapes — what decides compiled programs — are the
+    fifo ones."""
+    reqs = [dataclasses.replace(r, priority=i % 3)
+            for i, r in enumerate(_mixed_requests(ws, 11, backend="table"))]
+    shapes = lambda plans: sorted((p.signature, p.slots) for p in plans)  # noqa: E731
+    fifo = shapes(plan_batch(reqs, max_slots=4))
+    assert shapes(plan_batch(reqs, policy="priority", max_slots=4)) == fifo
+    assert shapes(plan_batch(reqs, policy="edf", max_slots=4)) == fifo
+
+
+def test_plan_batch_slot_hints_round_up_never_down(ws):
+    reqs = _mixed_requests(ws, 3, backend="table")
+    sig = reqs[0].signature()
+    plans = plan_batch(reqs, max_slots=64, slot_hints={sig: 8})
+    assert len(plans) == 1 and plans[0].slots == 8  # 3 real rounded up
+    # a hint smaller than the natural size never shrinks the chunk
+    plans = plan_batch(reqs, max_slots=64, slot_hints={sig: 2})
+    assert [p.slots for p in plans] == [3]
+    # a stale hint above max_slots is ignored
+    plans = plan_batch(reqs, max_slots=2, slot_hints={sig: 8})
+    assert [p.slots for p in plans] == [2, 2]
 
 
 # ------------------------------------------------- heterogeneous parity
@@ -273,6 +338,111 @@ def test_service_ragged_drain_keeps_padded_tail_program(ws):
         _assert_matches_run_search(req, results[rid])
 
 
+def test_service_mid_drain_submit_zero_new_programs(ws):
+    """Submitting WHILE plans are cached (mid-drain) must not compile:
+    the re-planned residue rounds up to the signature's warm slot size
+    (the service's slot hints), so the ragged tail and the post-submit
+    chunk both reuse the 4-slot program — and every rid still maps to
+    the result of its OWN request."""
+    svc = DSEService(max_slots=4)
+    reqs = [SearchRequest(ws=ws, seed=200 + i, backend="table", pop_size=8,
+                          generations=2) for i in range(6)]
+    rids = svc.submit_all(reqs)
+    # warm the 4-slot program shape so only NEW shapes would compile below
+    SearchEngine(max_slots=4).run(reqs[:4])
+    n_ga0 = ga_mod._run_ga_batched_jit._cache_size()
+    n_seed0 = engine_mod._seed_batched_jit._cache_size()
+    svc.step()  # launch 1 of the cached [4, padded-2] plan
+    late = SearchRequest(ws=ws.subset([1, 2]), seed=777, backend="table",
+                         pop_size=8, generations=2)
+    rids.append(svc.submit(late))  # invalidates the cache: 2 + 1 remain
+    reqs.append(late)
+    results = svc.drain()
+    assert svc.stats.launches == 2  # 4 real, then 3 real in the 4-slot shape
+    new = (ga_mod._run_ga_batched_jit._cache_size() - n_ga0
+           + engine_mod._seed_batched_jit._cache_size() - n_seed0)
+    assert new == 0, f"mid-drain submit compiled {new} extra program(s)"
+    for req, rid in zip(reqs, rids):
+        _assert_matches_run_search(req, results[rid])
+
+
+def _mixed_priority_requests(ws, n, pop=8, gens=2, seed0=0):
+    """Mixed subsets/objectives/seeds AND priorities 1..7 (never 0, so a
+    later priority-0 submit is uniquely the most urgent)."""
+    reqs = _mixed_requests(ws, n, backend="table", pop=pop, gens=gens,
+                           seed0=seed0)
+    return [dataclasses.replace(r, priority=1 + i % 7)
+            for i, r in enumerate(reqs)]
+
+
+# ----------------------------------------- acceptance: async mixed-priority
+def test_async_drain_bit_identical_to_sync_with_priority_jump(ws):
+    """256 mixed-priority requests drained through AsyncDSEService are
+    bit-identical to the synchronous DSEService drain of the same mix,
+    AND a priority-0 request submitted mid-drain (from the first launch's
+    future callback — which runs on the worker thread BEFORE the next
+    dispatch, so the schedule is deterministic) launches before the
+    lower-priority work that is still queued."""
+    n = 256
+    sync_svc = DSEService(policy="priority")
+    sync_rids = sync_svc.submit_all(_mixed_priority_requests(ws, n))
+    sync_res = sync_svc.drain()
+
+    async_svc = AsyncDSEService(policy="priority", paused=True)
+    reqs = _mixed_priority_requests(ws, n)
+    jump_req = SearchRequest(ws=ws.subset([0]), seed=31337, backend="table",
+                             pop_size=8, generations=2, priority=0)
+    jump: dict = {}
+
+    def submit_urgent(_fut):
+        if not jump:  # first completed future only
+            jump["fut"] = async_svc.submit(jump_req)
+
+    futs = async_svc.submit_all(reqs)
+    for f in futs:
+        f.add_done_callback(submit_urgent)
+    async_svc.resume()
+    results = async_svc.drain(timeout=600)
+    async_svc.close()
+
+    # --- the priority-0 jump: submitted after launch 1, launched next
+    assert "fut" in jump
+    jump_rid = jump["fut"].rid
+    jump_launch = next(i for i, l in enumerate(async_svc.launch_log)
+                       if jump_rid in l)
+    assert jump_launch == 1, async_svc.launch_log
+    later = [rid for l in async_svc.launch_log[2:] for rid in l]
+    assert later, "nothing queued behind the urgent request"
+    by_rid = dict(zip([f.rid for f in futs], reqs))
+    assert all(by_rid[rid].priority > 0 for rid in later)
+
+    # --- bit-identical to the synchronous drain of the same mix
+    assert len(results) == n + 1
+    for f, sync_rid, req in zip(futs, sync_rids, reqs):
+        a, s = f.result(), sync_res[sync_rid]
+        np.testing.assert_array_equal(np.asarray(a.ga.scores),
+                                      np.asarray(s.ga.scores))
+        np.testing.assert_array_equal(a.top_scores, s.top_scores)
+        np.testing.assert_array_equal(a.top_genomes, s.top_genomes)
+        assert a.workload_names == req.ws.names
+    assert np.isfinite(jump["fut"].result().top_scores).all()
+    # latency telemetry recorded for every request
+    assert len(async_svc.stats.latency_samples) == n + 1
+    assert len(async_svc.stats.wait_samples) == n + 1
+
+
+def test_async_submit_returns_future_without_blocking(ws):
+    with AsyncDSEService() as svc:
+        fut = svc.submit(SearchRequest(ws=ws.subset([0]), seed=5,
+                                       backend="table", pop_size=8,
+                                       generations=2))
+        res = fut.result(timeout=300)
+    _assert_matches_run_search(
+        SearchRequest(ws=ws.subset([0]), seed=5, backend="table",
+                      pop_size=8, generations=2), res)
+    assert svc.stats.completed == 1
+
+
 def test_service_stream_yields_all(ws):
     svc = DSEService()
     rids = svc.submit_all(_mixed_requests(ws, 4, pop=8, gens=2))
@@ -311,10 +481,9 @@ def test_heterogeneous_batch_sharded_parity(ws):
 @pytest.mark.multidevice
 def test_service_on_mesh(ws):
     # (2, 4) mirrors the table-backend layouts the sharded parity suite
-    # pins (tests/test_search_sharded.py: (2,4)/(8,1)); a (4,2) mesh with
-    # a ragged batch ULP-drifts the table path even on the PRE-engine
-    # stack (static objective + argsort survival), so it is outside the
-    # bit-parity envelope the repo has ever guaranteed.
+    # pins; the full (incl. (4,2)-ragged) envelope characterization lives
+    # in tests/test_search_sharded.py::test_table_backend_sharded_parity_
+    # envelope.
     from repro.launch.mesh import make_search_mesh
 
     svc = DSEService(mesh=make_search_mesh(2, 4))

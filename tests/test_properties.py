@@ -131,6 +131,79 @@ def test_table_backend_matches_dense_oracle(seed, w, l, density):
     )
 
 
+# ----------------------------------------------------- batch-plan properties
+@given(
+    st.lists(
+        st.tuples(
+            st.sampled_from([(0,), (1,), (0, 1), (0, 1, 2, 3)]),  # ws subset
+            st.sampled_from([8, 16]),  # pop_size -> distinct signature
+            st.sampled_from(["table", "jnp"]),
+            st.integers(0, 5),  # priority
+            st.one_of(st.none(), st.floats(0.0, 100.0)),  # deadline_s
+        ),
+        min_size=1, max_size=12,
+    ),
+    st.randoms(use_true_random=False),  # submit-order permutation
+    st.sampled_from([2, 3, 64]),
+    st.sampled_from(["fifo", "priority", "edf"]),
+)
+@settings(max_examples=40, deadline=None)
+def test_plan_batch_is_a_policy_ordered_partition(
+    ws, specs, rnd, max_slots, policy
+):
+    """For ANY request mix (signatures, priorities, deadlines) and ANY
+    submit-order permutation, plan_batch's plan indices are an exact
+    partition of the queue — every request in exactly one plan — and the
+    emitted order respects the policy: members of a plan are urgency-
+    sorted, plans launch most-urgent-first, and each signature group's
+    chunk concatenation is urgency-sorted."""
+    import dataclasses as dc
+
+    from repro.core.engine import (
+        RequestMeta,
+        SearchRequest,
+        get_policy,
+        plan_batch,
+    )
+
+    reqs = [
+        SearchRequest(ws=ws.subset(list(sub)), seed=i, backend=be,
+                      pop_size=pop, generations=2, priority=pr,
+                      deadline_s=dl)
+        for i, (sub, pop, be, pr, dl) in enumerate(specs)
+    ]
+    rnd.shuffle(reqs)
+    pol = get_policy(policy)
+    keys = [
+        pol.key(r, RequestMeta(seq=i, priority=r.priority,
+                               deadline_s=r.deadline_s))
+        for i, r in enumerate(reqs)
+    ]
+    plans = plan_batch(reqs, max_slots=max_slots, policy=policy)
+
+    flat = [i for p in plans for i in p.indices]
+    assert sorted(flat) == list(range(len(reqs)))  # exact partition
+    for p in plans:
+        assert 0 < len(p.requests) <= p.slots <= max_slots
+        assert p.requests == [reqs[i] for i in p.indices]
+        ks = [keys[i] for i in p.indices]
+        assert ks == sorted(ks)  # within-plan members urgency-ordered
+    firsts = [keys[p.indices[0]] for p in plans]
+    assert firsts == sorted(firsts)  # most urgent plan launches first
+    by_sig = {}
+    for p in plans:
+        by_sig.setdefault(p.signature, []).append(p)
+    for chunks in by_sig.values():
+        assert len({p.slots for p in chunks}) == 1  # one program per group
+        cat = [keys[i] for p in chunks for i in p.indices]
+        assert cat == sorted(cat)  # group order respects the policy
+    # scheduling metadata never perturbs the signature partition
+    stripped = [dc.replace(r, priority=0, deadline_s=None) for r in reqs]
+    ref = plan_batch(stripped, max_slots=max_slots)
+    assert sorted((p.signature, p.slots, len(p.requests)) for p in ref) == \
+        sorted((p.signature, p.slots, len(p.requests)) for p in plans)
+
+
 # -------------------------------------------------- sharding-helper properties
 @given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2**31 - 1))
 @settings(max_examples=10, deadline=None)

@@ -8,10 +8,19 @@
 #                                  # of experiments/search_throughput.json
 #                                  # so the perf trajectory is recorded per
 #                                  # PR
-#   bash tools/ci.sh serve-smoke   # DSE-service smoke: submit ~32 mixed
-#                                  # requests to the continuous-batching
-#                                  # queue, drain, assert every result is
-#                                  # present with a finite best score
+#   bash tools/ci.sh serve-smoke   # DSE-service smoke, three legs: sync
+#                                  # fifo (~32 mixed requests, all results
+#                                  # finite), sync EDF (launch order ==
+#                                  # earliest-absolute-deadline-first on a
+#                                  # mixed-deadline paper_request_mix) and
+#                                  # async priority (mixed-priority mix
+#                                  # through AsyncDSEService, futures all
+#                                  # finite) — plus the virtual-clock
+#                                  # scheduler-sim suite
+#
+# The scheduler-sim suite (tests/test_scheduler_sim.py) is part of the
+# plain pytest run, so it executes in BOTH the tier-1 (1-device) and
+# multidevice (fake-8-device) jobs — the harness is device-count-free.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -28,6 +37,7 @@ elif [[ "${1:-}" == "bench-smoke" ]]; then
   python -m benchmarks.bench_search_throughput --quick --backend table
   python -m benchmarks.bench_dse_service --quick
 elif [[ "${1:-}" == "serve-smoke" ]]; then
+  python -m pytest -x -q tests/test_scheduler_sim.py
   python -m benchmarks.bench_dse_service --smoke
 else
   python -m pytest -x -q
