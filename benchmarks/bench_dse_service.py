@@ -26,9 +26,12 @@ records:
 operating point, asserting every result arrives with a finite best
 score — plus an EDF leg (deadline-ordered launches on the sync service)
 and an async leg (mixed-priority ``AsyncDSEService`` drain, futures all
-finite).  ``python -m benchmarks.bench_dse_service`` appends the
-``service`` row of ``experiments/search_throughput.json`` (see
-benchmarks/README.md for the methodology).
+finite).  ``--fault-smoke`` is the CI fault-tolerance leg: every chunk
+launch over the REAL engine fails once with a transient ``EngineFault``
+and the retry lane must recover every request to a full finite result
+(see ``fault_smoke``).  ``python -m benchmarks.bench_dse_service``
+appends the ``service`` row of ``experiments/search_throughput.json``
+(see benchmarks/README.md for the methodology).
 """
 from __future__ import annotations
 
@@ -185,6 +188,63 @@ def smoke(n: int = 32) -> int:
     return 0
 
 
+def fault_smoke(n: int = 16) -> int:
+    """CI fault-smoke: the retry lane over the REAL engine.
+
+    A wrapper engine fails every CHUNK launch (plans carrying more than
+    one request) the first time it sees that rid set — a transient
+    per-chunk ``EngineFault`` — so the service's retry lane must re-plan
+    each member in isolation and recover ALL of them to full
+    (non-partial) finite results: failures == n, retries == n,
+    partials == abandoned == 0.
+    """
+    from repro.core.engine import EngineFault, SearchEngine
+    from repro.serve.dse import DSEService, RetryPolicy, paper_request_mix
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    class ChunkLaunchFails:
+        """Fails the first launch of every distinct multi-request seed
+        set; isolated (single-request) retries go through — a transient
+        per-chunk fault."""
+
+        def __init__(self, inner):
+            self.inner = inner
+            self.max_slots = inner.max_slots
+            self.seen = set()
+            self.injected = 0
+
+        def execute(self, plan, *, mesh=None):
+            key = tuple(sorted(r.seed for r in plan.requests))
+            if len(key) > 1 and key not in self.seen:
+                self.seen.add(key)
+                self.injected += 1
+                raise EngineFault(f"injected transient fault for {key}")
+            return self.inner.execute(plan, mesh=mesh)
+
+    ws = pack_workloads([(nm, cnn_workload(nm)) for nm in PAPER_WORKLOADS])
+    eng = ChunkLaunchFails(SearchEngine(max_slots=8))
+    svc = DSEService(engine=eng,
+                     retry=RetryPolicy(max_attempts=2, backoff_s=0.0),
+                     partial_results=True)
+    rids = svc.submit_all(paper_request_mix(
+        ws, n, backend="table", pop_size=40, generations=6,
+    ))
+    results = svc.drain()
+    _assert_all_finite(rids, results)
+    assert not any(results[r].partial for r in rids), \
+        "retried request resolved partial instead of recovering fully"
+    st = svc.stats
+    assert st.retries == n, f"expected {n} retries, got {st.retries}"
+    assert st.failures == n, f"expected {n} failures, got {st.failures}"
+    assert st.partials == 0 and st.abandoned == 0, (st.partials, st.abandoned)
+    print(f"[dse-service] fault-smoke: {n}/{n} requests recovered through "
+          f"the retry lane ({st.failures} request failures over "
+          f"{eng.injected} faulted chunks, {st.retries} isolated retries, "
+          f"0 partials) -- {st.summary()}")
+    return 0
+
+
 def main(argv=None) -> int:
     import argparse
 
@@ -195,6 +255,10 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI serve-smoke: drain ~32 tiny mixed requests, "
                          "assert all present + finite; records nothing")
+    ap.add_argument("--fault-smoke", action="store_true",
+                    help="CI fault-smoke: every chunk launch fails once "
+                         "over the REAL engine; the retry lane must "
+                         "recover all requests fully; records nothing")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument(
         "--mesh", nargs="?", const="auto", default=None, metavar="SEARCHxPOP",
@@ -204,6 +268,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.smoke:
         return smoke(args.requests or 32)
+    if args.fault_smoke:
+        return fault_smoke(args.requests or 16)
     mesh = prepare_search_mesh(args.mesh) if args.mesh else None
     res = run(quick=args.quick, mesh=mesh, n_requests=args.requests)
     if mesh is not None:

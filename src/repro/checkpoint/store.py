@@ -115,6 +115,12 @@ def restore(ckpt_dir: str | Path, template: PyTree, step: Optional[int] = None) 
     return jax.tree.unflatten(treedef, arrs), step
 
 
+def clear(ckpt_dir: str | Path) -> None:
+    """Remove a checkpoint directory tree entirely (a finished search
+    deleting its own saved state); a missing directory is a no-op."""
+    shutil.rmtree(Path(ckpt_dir), ignore_errors=True)
+
+
 def restore_resharded(
     ckpt_dir: str | Path,
     template: PyTree,

@@ -42,7 +42,9 @@ entry); the acceptance test bounds it at 4.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from functools import lru_cache, partial
+from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -50,7 +52,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import space
-from repro.core.ga import GAResult, run_ga_batched
+from repro.core.ga import (
+    GAResult,
+    GAState,
+    init_ga_state_batched,
+    run_ga_batched,
+    run_ga_batched_segment,
+)
 from repro.core.objectives import (
     OBJECTIVE_INDEX,
     OBJECTIVE_WEIGHTS,
@@ -73,11 +81,38 @@ INDEXED = "__indexed__"
 class SearchResult:
     workload_names: Tuple[str, ...]
     objective: str
-    ga: GAResult
+    ga: Optional[GAResult]  # None only for empty partials (never launched)
     top_designs: List[Dict[str, float]]  # decoded, deduped, best-first
     top_scores: np.ndarray
     top_genomes: np.ndarray
     convergence: np.ndarray  # best-so-far score per generation
+    valid: bool = True  # False: no finite-scoring design in the history
+    partial: bool = False  # True: search stopped before its full budget
+    generations: int = -1  # generations actually applied (-1 = full budget)
+
+
+class EngineFault(RuntimeError):
+    """A launch failed permanently (retries exhausted, or no retry path).
+
+    ``partials`` — when the failing plan had already advanced some
+    segments — carries one anytime ``SearchResult`` (``partial=True``,
+    finalized from the accumulated history) per plan request, aligned
+    with ``plan.requests`` (``None`` where nothing was evaluated yet), so
+    a service can resolve the affected rids with their best-so-far."""
+
+    def __init__(self, msg: str, *, partials: Optional[List[Optional[SearchResult]]] = None,
+                 generations_done: int = 0):
+        super().__init__(msg)
+        self.partials = partials
+        self.generations_done = int(generations_done)
+
+
+class NonFiniteScoreError(EngineFault):
+    """The per-segment score guard tripped: a launch produced NaN scores.
+
+    (+inf is the NORMAL encoding for an infeasible design, so the guard
+    is NaN-only; an all-infeasible history is flagged on the result as
+    ``valid=False`` by ``_finalize`` instead.)"""
 
 
 # --------------------------------------------------------- eval callbacks
@@ -325,7 +360,8 @@ def _top_unique(
 
 
 def _finalize(
-    ga: GAResult, names: Sequence[str], objective: str, top_k: int
+    ga: GAResult, names: Sequence[str], objective: str, top_k: int,
+    *, partial: bool = False,
 ) -> SearchResult:
     G1, P, n = ga.genomes.shape
     flat_g = np.asarray(ga.genomes).reshape(-1, n)
@@ -333,6 +369,9 @@ def _finalize(
     top_g, top_s = _top_unique(flat_g, flat_s, top_k)
     top_designs = space.design_dicts_from_indices(space.decode_indices_np(top_g))
     conv = np.minimum.accumulate(np.asarray(ga.scores).min(axis=1))
+    # finite-score guard: _top_unique drops every non-finite (inf/nan)
+    # score, so an empty top list means the whole history scored
+    # infeasible or poisoned — flag it instead of silently returning
     return SearchResult(
         workload_names=tuple(names),
         objective=objective,
@@ -341,6 +380,29 @@ def _finalize(
         top_scores=top_s,
         top_genomes=top_g,
         convergence=conv,
+        valid=bool(len(top_s)),
+        partial=bool(partial),
+        generations=int(G1) - 1,
+    )
+
+
+def empty_partial_result(req: "SearchRequest") -> SearchResult:
+    """The anytime result of a request that never got a good launch: no
+    designs, ``valid=False``, ``partial=True``.  What a service resolves
+    a quarantined or deadline-swept request with when no checkpointed
+    best exists."""
+    n = space.N_GENES
+    return SearchResult(
+        workload_names=tuple(req.ws.names),
+        objective=_objective_label(req),
+        ga=None,
+        top_designs=[],
+        top_scores=np.zeros((0,), np.float32),
+        top_genomes=np.zeros((0, n), np.float32),
+        convergence=np.zeros((0,), np.float32),
+        valid=False,
+        partial=True,
+        generations=0,
     )
 
 
@@ -431,6 +493,23 @@ class BatchPlan:
     slots: int
     pad_w: int
     pad_l: int
+
+
+def plan_key(plan: BatchPlan) -> str:
+    """Content hash of everything that determines a plan's GA trajectory
+    (workload fingerprints, objective, area, PRNG keys, GA params, slot
+    shape).  Stable across processes — the checkpoint directory name, so
+    a killed drain's restart finds its own saved state."""
+    h = hashlib.sha256()
+    for r in plan.requests:
+        h.update(r.ws.fingerprint().encode())
+        h.update(repr((
+            r.objective, r.obj_weights, float(r.area_constr), r.backend,
+            int(r.pop_size), int(r.generations), int(r.top_k),
+        )).encode())
+        h.update(np.asarray(r.prng_key()).tobytes())
+    h.update(repr((int(plan.slots), int(plan.pad_w), int(plan.pad_l))).encode())
+    return h.hexdigest()[:24]
 
 
 # ------------------------------------------------------ scheduling policy
@@ -583,6 +662,19 @@ def plan_batch(
 
 
 # ----------------------------------------------------------------- engine
+@dataclasses.dataclass
+class _LaunchPrep:
+    """Everything ``execute`` computes before the GA launch, shared by the
+    single-shot and segmented paths so both trace identical operands."""
+
+    packed: List[SearchRequest]
+    place: Callable
+    k_ga: Any
+    init: Any
+    ctx: tuple
+    eval_fn: Callable
+
+
 class SearchEngine:
     """Executes batch plans as cached one-jit GA programs.
 
@@ -593,11 +685,34 @@ class SearchEngine:
     workload sets hit both.  ``mesh`` (``launch.mesh.make_search_mesh``)
     lays every launch out over the 2-D (search, population) device mesh
     via ``core.distributed.place_batched``; scores are bit-identical with
-    or without it."""
+    or without it.
 
-    def __init__(self, *, mesh=None, max_slots: int = 64):
+    Robustness knobs (all off by default — the single-shot path is
+    byte-for-byte the original engine):
+
+      * ``segment_gens``    — run each plan as ceil(G / k) segment
+        launches of k generations through ``core.ga.run_ga_segment``
+        (bit-identical to the single launch), with a NaN score guard
+        after every segment.
+      * ``segment_retries`` — how many times a failed/NaN segment is
+        re-launched from the last good ``GAState`` before the plan gives
+        up with an ``EngineFault`` carrying anytime partial results.
+      * ``checkpoint_dir``  — persist the ``GAState`` + history every
+        ``checkpoint_every`` segments under ``checkpoint_dir/<plan_key>``
+        (atomic ``checkpoint.store``); a re-executed identical plan
+        resumes from the newest committed step, and a completed plan
+        clears its own directory.
+    """
+
+    def __init__(self, *, mesh=None, max_slots: int = 64,
+                 segment_gens: Optional[int] = None, segment_retries: int = 1,
+                 checkpoint_dir: Optional[str] = None, checkpoint_every: int = 1):
         self.mesh = mesh
         self.max_slots = int(max_slots)
+        self.segment_gens = None if segment_gens is None else int(segment_gens)
+        self.segment_retries = int(segment_retries)
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = max(1, int(checkpoint_every))
         self._padded_tables: Dict[tuple, tuple] = {}
         # slot-packed device tensors keyed on the packed content
         # (per-slot workload fingerprints + padded shape): a warm drain
@@ -640,9 +755,33 @@ class SearchEngine:
         return hit
 
     def execute(self, plan: BatchPlan, *, mesh=None) -> List[SearchResult]:
-        """One slot-packed XLA launch; returns results for the plan's REAL
-        requests (pad slots dropped), in plan order."""
+        """One slot-packed XLA launch (or, with ``segment_gens``, a chain
+        of guarded segment launches — same bits); returns results for the
+        plan's REAL requests (pad slots dropped), in plan order."""
         mesh = self.mesh if mesh is None else mesh
+        r0 = plan.requests[0]
+        k = self.segment_gens
+        if k is not None and 0 < k < int(r0.generations):
+            return self._execute_segmented(plan, mesh, k)
+        prep = self._prepare(plan, mesh)
+        ga = run_ga_batched(
+            prep.k_ga, prep.eval_fn,
+            pop_size=r0.pop_size, generations=r0.generations,
+            init_genomes=prep.init, ctx=prep.ctx,
+        )
+        # one device->host transfer per field, then pure-numpy per-slot prep
+        ga_np = GAResult(*(np.asarray(f) for f in ga))
+        return [
+            _finalize(
+                GAResult(*(f[i] for f in ga_np)),
+                r.ws.names, _objective_label(r), r.top_k,
+            )
+            for i, r in enumerate(plan.requests)
+        ]
+
+    def _prepare(self, plan: BatchPlan, mesh) -> _LaunchPrep:
+        """Pack, place and seed a plan up to (but not including) the GA
+        launch.  Shared verbatim by both execution paths."""
         reqs = plan.requests
         r0 = reqs[0]
         backend, tech = r0.backend, r0.tech
@@ -712,16 +851,141 @@ class SearchEngine:
             ctx = ctx + (place(codes), place(areas))
             eval_fn = _ctx_eval(INDEXED, 0.0, tech, backend)
 
-        ga = run_ga_batched(
-            k_ga, eval_fn,
-            pop_size=r0.pop_size, generations=r0.generations,
-            init_genomes=init, ctx=ctx,
+        return _LaunchPrep(packed=packed, place=place, k_ga=k_ga,
+                           init=init, ctx=ctx, eval_fn=eval_fn)
+
+    # ------------------------------------------------- segmented execution
+    def _place_state(self, state: GAState, place) -> GAState:
+        """Commit a (possibly host-restored) batched state to the mesh
+        layout the GA programs expect (identity when meshless)."""
+        return GAState(
+            genomes=place(jnp.asarray(state.genomes), pop_dim=1),
+            scores=place(jnp.asarray(state.scores), pop_dim=1),
+            key=place(jnp.asarray(state.key)),
+            gen=place(jnp.asarray(state.gen)),
         )
-        # one device->host transfer per field, then pure-numpy per-slot prep
-        ga_np = GAResult(*(np.asarray(f) for f in ga))
+
+    def _ckpt_dir(self, plan: BatchPlan) -> Optional[Path]:
+        if self.checkpoint_dir is None:
+            return None
+        return Path(self.checkpoint_dir) / plan_key(plan)
+
+    def _partial_results(
+        self, plan: BatchPlan, gh: Optional[np.ndarray], sh: Optional[np.ndarray],
+    ) -> List[Optional[SearchResult]]:
+        """Anytime results from the accumulated (S, g+1, P, n) history —
+        ``None`` per request when nothing was ever evaluated."""
+        if gh is None:
+            return [None] * len(plan.requests)
+        out = []
+        for i, r in enumerate(plan.requests):
+            ga_i = self._history_result(gh[i], sh[i])
+            out.append(_finalize(ga_i, r.ws.names, _objective_label(r),
+                                 r.top_k, partial=True))
+        return out
+
+    @staticmethod
+    def _history_result(gh_i: np.ndarray, sh_i: np.ndarray) -> GAResult:
+        """A host-side ``GAResult`` over one slot's (g+1, P, ·) history;
+        ``np.argmin`` picks the first minimum exactly like the in-jit
+        ``jnp.argmin`` of the single-shot program."""
+        n = gh_i.shape[-1]
+        flat_s = sh_i.reshape(-1)
+        b = int(np.argmin(flat_s)) if flat_s.size else 0
+        return GAResult(
+            genomes=gh_i, scores=sh_i,
+            best_genome=gh_i.reshape(-1, n)[b] if flat_s.size else np.zeros(n),
+            best_score=flat_s[b] if flat_s.size else np.float32(np.inf),
+        )
+
+    def _execute_segmented(
+        self, plan: BatchPlan, mesh, seg: int
+    ) -> List[SearchResult]:
+        """Advance the plan ``seg`` generations per launch with a NaN
+        score guard, retry-from-last-good-state, and optional on-disk
+        checkpoints.  The chained segments are bit-identical to the
+        single launch (tests/test_ga_segments.py)."""
+        from repro.checkpoint import store
+
+        reqs = plan.requests
+        r0 = reqs[0]
+        G = int(r0.generations)
+        ck_dir = self._ckpt_dir(plan)
+
+        state: Optional[GAState] = None
+        gh = sh = None  # accumulated history, (S, done+1, P, n) / (S, done+1, P)
+        if ck_dir is not None and store.latest_step(ck_dir) is not None:
+            template = {"state": GAState(0, 0, 0, 0), "gh": 0, "sh": 0}
+            tree, _ = store.restore(ck_dir, template)
+            state = GAState(*tree["state"])
+            gh, sh = np.asarray(tree["gh"]), np.asarray(tree["sh"])
+
+        try:
+            prep = self._prepare(plan, mesh)
+            if state is None:
+                state = init_ga_state_batched(
+                    prep.k_ga, prep.eval_fn, prep.init, ctx=prep.ctx
+                )
+                s0 = np.asarray(state.scores)
+                if np.isnan(s0).any():
+                    raise NonFiniteScoreError(
+                        "NaN scores in the seed evaluation"
+                    )
+                gh = np.asarray(state.genomes)[:, None]
+                sh = s0[:, None]
+        except EngineFault:
+            raise
+        except Exception as e:
+            raise EngineFault(
+                f"segmented launch setup failed: {e}",
+                partials=self._partial_results(plan, gh, sh),
+            ) from e
+
+        done = int(np.asarray(state.gen).reshape(-1)[0])
+        seg_idx = 0
+        while done < G:
+            k_gens = min(seg, G - done)
+            state = self._place_state(state, prep.place)
+            attempt = 0
+            while True:
+                try:
+                    new_state, (hg, hs) = run_ga_batched_segment(
+                        state, prep.eval_fn, ctx=prep.ctx,
+                        generations=k_gens, total_generations=G,
+                    )
+                    hs_np = np.asarray(hs)  # (S, k, P)
+                    if np.isnan(hs_np).any():
+                        raise NonFiniteScoreError(
+                            f"NaN scores in segment at generation {done}"
+                        )
+                    hg_np = np.asarray(hg)
+                    break
+                except Exception as e:
+                    attempt += 1
+                    if attempt > self.segment_retries:
+                        raise EngineFault(
+                            f"segment at generation {done} failed after "
+                            f"{attempt} attempts: {e}",
+                            partials=self._partial_results(plan, gh, sh),
+                            generations_done=done,
+                        ) from e
+                    # retry re-launches from the SAME (undonated) state
+            gh = np.concatenate([gh, hg_np], axis=1)
+            sh = np.concatenate([sh, hs_np], axis=1)
+            state = new_state
+            done += k_gens
+            seg_idx += 1
+            if (ck_dir is not None and done < G
+                    and seg_idx % self.checkpoint_every == 0):
+                host_state = GAState(*(np.asarray(f) for f in state))
+                store.save(ck_dir, done,
+                           {"state": host_state, "gh": gh, "sh": sh})
+
+        if ck_dir is not None:
+            store.clear(ck_dir)
         return [
             _finalize(
-                GAResult(*(f[i] for f in ga_np)),
+                self._history_result(gh[i], sh[i]),
                 r.ws.names, _objective_label(r), r.top_k,
             )
             for i, r in enumerate(reqs)

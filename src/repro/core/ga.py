@@ -25,6 +25,16 @@ One jit covers the entire experiment, not just one generation:
 The evaluation callback is a parameter, so the same GA drives joint
 (multi-workload) and separate (single-workload) searches, and the
 population axis can be sharded over the mesh (``repro.core.distributed``).
+
+Anytime / segmented execution: the scan carry is also exposed as a
+first-class ``GAState`` (population, scores, master rng key, generation
+counter), with ``init_ga_state`` / ``run_ga_segment`` (and their batched
+twins) advancing k generations per launch through one cached jit.  The
+segment derives its per-generation keys by splitting the SAME master key
+into the run's full ``total_generations`` keys (a static count) and
+dynamic-slicing out its window, so N segments of k generations are
+bit-identical to one ``run_ga`` of N*k — the parity is asserted in
+tests/test_ga_segments.py and as a hypothesis property.
 """
 from __future__ import annotations
 
@@ -47,6 +57,18 @@ class GAResult(NamedTuple):
     scores: jnp.ndarray  # (G+1, P)
     best_genome: jnp.ndarray  # (n,)
     best_score: jnp.ndarray  # ()
+
+
+class GAState(NamedTuple):
+    """The GA scan carry as a resumable value.  ``key`` is the MASTER run
+    key (never advanced — segments index into ``split(key, total)`` by
+    ``gen``), ``gen`` the number of generations already applied.  Batched
+    variants carry a leading (B,) axis on every field."""
+
+    genomes: jnp.ndarray  # (P, n) current population
+    scores: jnp.ndarray  # (P,)
+    key: jax.Array  # master PRNG key of the whole run
+    gen: jnp.ndarray  # () int32, generations completed so far
 
 
 class _IgnoreCtx:
@@ -145,17 +167,15 @@ def _poly_mutation(key, x: jnp.ndarray, eta: float, prob: float):
     return jnp.clip(jnp.where(do, x + delta, x), 0.0, 1.0 - 1e-7)
 
 
-def _ga_core(
-    key, eval_fn, pop_size, generations, init_genomes, ctx,
-    sbx_prob, sbx_eta, mut_eta,
-) -> GAResult:
+def _make_gen_step(eval_fn, ctx, pop_size, n_genes, sbx_prob, sbx_eta, mut_eta):
+    """The per-generation scan body, shared verbatim by the single-shot
+    ``_ga_core`` and the segmented ``_segment_core`` so both paths compile
+    the exact same generation program (the bit-parity guarantee)."""
     P = pop_size
-    n = init_genomes.shape[-1]
-    mut_prob = 1.0 / n
+    mut_prob = 1.0 / n_genes
     # odd P: select one extra pair and truncate the children back to P, so
     # no parent slot is silently dropped and history shapes stay (G+1, P).
     n_pairs = (P + 1) // 2
-    s0 = eval_fn(init_genomes, ctx)
 
     def gen(carry, k):
         pop, scores = carry
@@ -174,6 +194,16 @@ def _ga_core(
         new_pop, new_scores = allg[order], alls[order]
         return (new_pop, new_scores), (children, child_scores)
 
+    return gen
+
+
+def _ga_core(
+    key, eval_fn, pop_size, generations, init_genomes, ctx,
+    sbx_prob, sbx_eta, mut_eta,
+) -> GAResult:
+    n = init_genomes.shape[-1]
+    s0 = eval_fn(init_genomes, ctx)
+    gen = _make_gen_step(eval_fn, ctx, pop_size, n, sbx_prob, sbx_eta, mut_eta)
     keys = jax.random.split(key, generations)
     (pop, scores), (hist_g, hist_s) = jax.lax.scan(gen, (init_genomes, s0), keys)
 
@@ -189,7 +219,33 @@ def _ga_core(
     )
 
 
+def _segment_core(
+    state, eval_fn, ctx, seg_gens, total_gens, sbx_prob, sbx_eta, mut_eta,
+) -> Tuple[GAState, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Advance ``seg_gens`` generations from ``state``.
+
+    Key derivation: split the master key into the run's FULL
+    ``total_gens`` keys (static, so the program caches per (seg, total)
+    pair) and dynamic-slice this segment's window at the traced ``gen``
+    counter.  ``jax.random.split`` is NOT prefix-stable across counts
+    (``split(k, a)[:b] != split(k, b)``), so slicing the full split is the
+    only derivation that reproduces ``run_ga``'s stream bit-exactly.
+    """
+    pop, scores = state.genomes, state.scores
+    P, n = pop.shape[-2], pop.shape[-1]
+    gen = _make_gen_step(eval_fn, ctx, P, n, sbx_prob, sbx_eta, mut_eta)
+    all_keys = jax.random.split(state.key, total_gens)
+    keys = jax.lax.dynamic_slice_in_dim(all_keys, state.gen, seg_gens)
+    (pop, scores), hist = jax.lax.scan(gen, (pop, scores), keys)
+    new_state = GAState(
+        genomes=pop, scores=scores, key=state.key,
+        gen=state.gen + jnp.int32(seg_gens),
+    )
+    return new_state, hist
+
+
 _GA_STATICS = ("eval_fn", "pop_size", "generations", "sbx_prob", "sbx_eta", "mut_eta")
+_SEG_STATICS = ("eval_fn", "seg_gens", "total_gens", "sbx_prob", "sbx_eta", "mut_eta")
 
 
 @partial(jax.jit, static_argnames=_GA_STATICS, donate_argnames=("init_genomes",))
@@ -208,6 +264,42 @@ def _run_ga_batched_jit(keys, init_genomes, ctx, *, eval_fn, pop_size,
 
     ctx_axes = jax.tree_util.tree_map(lambda _: 0, ctx)
     return jax.vmap(one, in_axes=(0, 0, ctx_axes))(keys, init_genomes, ctx)
+
+
+@partial(jax.jit, static_argnames=("eval_fn",))
+def _init_state_jit(key, init_genomes, ctx, *, eval_fn):
+    return GAState(
+        genomes=init_genomes, scores=eval_fn(init_genomes, ctx),
+        key=key, gen=jnp.int32(0),
+    )
+
+
+@partial(jax.jit, static_argnames=("eval_fn",))
+def _init_state_batched_jit(keys, init_genomes, ctx, *, eval_fn):
+    def one(key, init, c):
+        return GAState(genomes=init, scores=eval_fn(init, c),
+                       key=key, gen=jnp.int32(0))
+
+    ctx_axes = jax.tree_util.tree_map(lambda _: 0, ctx)
+    return jax.vmap(one, in_axes=(0, 0, ctx_axes))(keys, init_genomes, ctx)
+
+
+@partial(jax.jit, static_argnames=_SEG_STATICS)
+def _run_ga_segment_jit(state, ctx, *, eval_fn, seg_gens, total_gens,
+                        sbx_prob, sbx_eta, mut_eta):
+    return _segment_core(state, eval_fn, ctx, seg_gens, total_gens,
+                         sbx_prob, sbx_eta, mut_eta)
+
+
+@partial(jax.jit, static_argnames=_SEG_STATICS)
+def _run_ga_batched_segment_jit(state, ctx, *, eval_fn, seg_gens, total_gens,
+                                sbx_prob, sbx_eta, mut_eta):
+    def one(st, c):
+        return _segment_core(st, eval_fn, c, seg_gens, total_gens,
+                             sbx_prob, sbx_eta, mut_eta)
+
+    ctx_axes = jax.tree_util.tree_map(lambda _: 0, ctx)
+    return jax.vmap(one, in_axes=(0, ctx_axes))(state, ctx)
 
 
 def run_ga(
@@ -280,3 +372,82 @@ def run_ga_batched(
             eval_fn=eval_fn, pop_size=int(pop_size), generations=int(generations),
             sbx_prob=float(sbx_prob), sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
         )
+
+
+def init_ga_state(
+    key: jax.Array, eval_fn: Callable, init_genomes: jnp.ndarray,
+    ctx: Any = None,
+) -> GAState:
+    """Evaluate the seed population into a resumable ``GAState`` at
+    generation 0.  ``key`` is the run's master key — the SAME key a
+    single-shot ``run_ga`` of the whole budget would receive.  Unlike
+    ``run_ga``, ``init_genomes`` is NOT donated (a failed segment retries
+    from the last state, which must stay alive)."""
+    if ctx is None and not isinstance(eval_fn, _IgnoreCtx):
+        eval_fn = _IgnoreCtx(eval_fn)
+    return _init_state_jit(key, init_genomes, ctx, eval_fn=eval_fn)
+
+
+def init_ga_state_batched(
+    keys: jnp.ndarray, eval_fn: Callable, init_genomes: jnp.ndarray,
+    ctx: Any = None,
+) -> GAState:
+    """Batched ``init_ga_state``: (B, 2) keys, (B, P, n) seeds, batched
+    ctx leaves -> a ``GAState`` with a leading (B,) axis on every field."""
+    if ctx is None and not isinstance(eval_fn, _IgnoreCtx):
+        eval_fn = _IgnoreCtx(eval_fn)
+    return _init_state_batched_jit(keys, init_genomes, ctx, eval_fn=eval_fn)
+
+
+def run_ga_segment(
+    state: GAState,
+    eval_fn: Callable,
+    *,
+    generations: int,
+    total_generations: int,
+    ctx: Any = None,
+    sbx_prob: float = SBX_PROB,
+    sbx_eta: float = SBX_ETA,
+    mut_eta: float = MUT_ETA,
+) -> Tuple[GAState, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Advance ``generations`` (k) generations through ONE cached jit,
+    returning ``(new_state, (children (k, P, n), child_scores (k, P)))``.
+
+    ``total_generations`` is the run's full budget (static): the segment
+    reproduces exactly the key window ``split(key, total)[gen:gen+k]``, so
+    chaining segments covering the budget is bit-identical to a single
+    ``run_ga(key, ..., generations=total_generations)`` — same history,
+    same best.  Requires ``state.gen + k <= total_generations``.  Nothing
+    is donated; a failed launch can re-run from the same ``state``.
+    """
+    if ctx is None and not isinstance(eval_fn, _IgnoreCtx):
+        eval_fn = _IgnoreCtx(eval_fn)
+    return _run_ga_segment_jit(
+        state, ctx, eval_fn=eval_fn,
+        seg_gens=int(generations), total_gens=int(total_generations),
+        sbx_prob=float(sbx_prob), sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
+    )
+
+
+def run_ga_batched_segment(
+    state: GAState,
+    eval_fn: Callable,
+    *,
+    generations: int,
+    total_generations: int,
+    ctx: Any = None,
+    sbx_prob: float = SBX_PROB,
+    sbx_eta: float = SBX_ETA,
+    mut_eta: float = MUT_ETA,
+) -> Tuple[GAState, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Batched ``run_ga_segment``: state fields and ctx leaves carry a
+    leading (B,) axis; histories come back as (B, k, P, n) / (B, k, P).
+    Per-element results match the unbatched segment (and therefore
+    ``run_ga``) exactly."""
+    if ctx is None and not isinstance(eval_fn, _IgnoreCtx):
+        eval_fn = _IgnoreCtx(eval_fn)
+    return _run_ga_batched_segment_jit(
+        state, ctx, eval_fn=eval_fn,
+        seg_gens=int(generations), total_gens=int(total_generations),
+        sbx_prob=float(sbx_prob), sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
+    )

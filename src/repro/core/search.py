@@ -65,6 +65,8 @@ import numpy as np
 from repro.core import space
 from repro.core.engine import (  # noqa: F401 — re-exported public/test API
     BACKENDS,
+    EngineFault,
+    NonFiniteScoreError,
     SearchRequest,
     SearchResult,
     _ctx_eval,
@@ -73,6 +75,7 @@ from repro.core.engine import (  # noqa: F401 — re-exported public/test API
     _top_unique,
     _workload_weights,
     default_engine,
+    empty_partial_result,
     largest_workload_index,
     make_eval_fn,
     seed_population,
@@ -97,15 +100,18 @@ def run_search(
     init_genomes: Optional[jnp.ndarray] = None,
     tech: TechParams = TECH,
     backend: str = "jnp",
+    engine=None,
 ) -> SearchResult:
-    """One joint search = a single-request engine plan."""
+    """One joint search = a single-request engine plan.  ``engine``
+    substitutes a configured ``SearchEngine`` (e.g. segmented execution
+    with checkpoints) for the shared default."""
     req = SearchRequest(
         ws=ws, objective=objective, area_constr=float(area_constr),
         key=key, backend=backend, pop_size=int(pop_size),
         generations=int(generations), top_k=int(top_k), tech=tech,
         init_genomes=init_genomes,
     )
-    return default_engine().run([req])[0]
+    return (engine or default_engine()).run([req])[0]
 
 
 def joint_search(key, ws: WorkloadSet, **kw) -> SearchResult:
@@ -128,6 +134,7 @@ def batched_search(
     tech: TechParams = TECH,
     backend: str = "jnp",
     mesh=None,
+    engine=None,
 ) -> List[SearchResult]:
     """B independent searches through the engine (one plan when shapes
     agree, chunked at the engine's slot limit for very large B).
@@ -182,7 +189,7 @@ def batched_search(
         )
         for b in range(B)
     ]
-    return default_engine().run(reqs, mesh=mesh)
+    return (engine or default_engine()).run(reqs, mesh=mesh)
 
 
 def joint_search_batched(keys: jnp.ndarray, ws: WorkloadSet, **kw) -> List[SearchResult]:

@@ -36,6 +36,20 @@ blocking the current one):
 
     python -m repro.launch.search --serve 256 --backend table \
         --serve-policy priority --serve-async
+
+Robustness knobs (anytime fault-tolerant DSE): ``--segment-gens K``
+runs every search as segments of K generations — bit-identical to the
+single launch, but a fault loses at most one segment — and
+``--checkpoint-dir DIR`` persists segment boundaries so a killed run
+resumes from the newest committed state.  Under ``--serve``,
+``--retry-attempts``/``--retry-backoff`` arm the deterministic
+retry-with-backoff lane (failed chunks re-plan each member in isolation,
+quarantining persistent offenders) and ``--partial-results`` resolves
+quarantined / past-deadline requests with their best-so-far anytime
+result instead of dropping them:
+
+    python -m repro.launch.search --serve 64 --backend table \
+        --segment-gens 2 --retry-attempts 3 --partial-results
 """
 from __future__ import annotations
 
@@ -76,14 +90,48 @@ def build_workloads(args) -> WorkloadSet:
     return pack_workloads(named)
 
 
+def build_engine(args, mesh):
+    """A configured ``SearchEngine`` when any robustness knob is set
+    (segmented execution, checkpoint/resume), else ``None`` (the drivers
+    fall back to the shared default engine)."""
+    if not (args.segment_gens or args.checkpoint_dir):
+        return None
+    from repro.core.engine import SearchEngine
+
+    # checkpointing only happens at segment boundaries, so a checkpoint
+    # dir without an explicit segment length gets 1-generation segments
+    return SearchEngine(
+        mesh=mesh,
+        segment_gens=args.segment_gens or (1 if args.checkpoint_dir else None),
+        segment_retries=args.segment_retries,
+        checkpoint_dir=args.checkpoint_dir or None,
+    )
+
+
 def serve(args, ws: WorkloadSet, mesh) -> int:
     """``--serve N``: drain N mixed requests through the DSE service.
     ``--serve-policy`` picks the scheduling policy (mixed priorities /
     deadlines are cycled into the request mix so the policy has work to
     do); ``--serve-async`` drains through the threaded
-    ``AsyncDSEService`` front end instead of the synchronous queue."""
-    from repro.serve.dse import AsyncDSEService, DSEService, paper_request_mix
+    ``AsyncDSEService`` front end instead of the synchronous queue.
+    ``--retry-attempts``/``--retry-backoff`` arm the retry-with-backoff
+    lane and ``--partial-results`` the anytime graceful-degradation path
+    (quarantined / past-deadline requests resolve with their best-so-far
+    instead of nothing)."""
+    from repro.serve.dse import (
+        AsyncDSEService,
+        DSEService,
+        RetryPolicy,
+        paper_request_mix,
+    )
 
+    engine = build_engine(args, mesh)
+    retry = None
+    if args.retry_attempts > 1:
+        retry = RetryPolicy(max_attempts=args.retry_attempts,
+                            backoff_s=args.retry_backoff)
+    svc_kw = dict(engine=engine, mesh=mesh, policy=args.serve_policy,
+                  retry=retry, partial_results=args.partial_results)
     mix_kw = {}
     if args.serve_policy == "priority":
         mix_kw["priorities"] = [3, 0, 1, 2]
@@ -96,7 +144,7 @@ def serve(args, ws: WorkloadSet, mesh) -> int:
     results = {}
     t0 = time.time()
     if args.serve_async:
-        with AsyncDSEService(mesh=mesh, policy=args.serve_policy) as svc:
+        with AsyncDSEService(**svc_kw) as svc:
             futs = svc.submit_all(reqs)
             print(f"[serve] {args.serve} heterogeneous requests submitted "
                   f"async (policy={args.serve_policy}, "
@@ -111,7 +159,7 @@ def serve(args, ws: WorkloadSet, mesh) -> int:
                       f"{','.join(res.workload_names)} -> best={best}")
         stats = svc.stats
     else:
-        svc = DSEService(mesh=mesh, policy=args.serve_policy)
+        svc = DSEService(**svc_kw)
         svc.submit_all(reqs)
         print(f"[serve] {args.serve} heterogeneous requests queued "
               f"(policy={args.serve_policy}, backend={args.backend}, "
@@ -132,6 +180,8 @@ def serve(args, ws: WorkloadSet, mesh) -> int:
           f"latency p50/p99 {stats.latency_p(50):.2f}/"
           f"{stats.latency_p(99):.2f}s, "
           f"{stats.deadline_misses} deadline misses)")
+    print(f"[serve] faults: {stats.failures} failures, {stats.retries} "
+          f"retries, {stats.partials} partials, {stats.abandoned} abandoned")
     if args.out:
         payload = [
             {
@@ -189,6 +239,41 @@ def main(argv=None) -> int:
         help="drain --serve through the threaded AsyncDSEService front "
              "end (submit returns futures) instead of the sync queue",
     )
+    ap.add_argument(
+        "--segment-gens", type=int, default=0, metavar="K",
+        help="run each search as ceil(gens/K) segments of K generations "
+             "(bit-identical to single-shot) so faults lose at most one "
+             "segment of work; 0 = single-shot",
+    )
+    ap.add_argument(
+        "--segment-retries", type=int, default=1,
+        help="per-segment retry budget from the last good GA state "
+             "before the engine gives up with an EngineFault",
+    )
+    ap.add_argument(
+        "--checkpoint-dir", default="", metavar="DIR",
+        help="persist segment boundaries under DIR; a re-run of the same "
+             "plan resumes from the latest checkpoint (implies segmented "
+             "execution, 1-generation segments if --segment-gens unset)",
+    )
+    ap.add_argument(
+        "--retry-attempts", type=int, default=0, metavar="N",
+        help="--serve: total launch attempts per request before it is "
+             "abandoned (failed chunks re-plan each member in isolation, "
+             "quarantining persistent offenders); <2 disables the retry "
+             "lane",
+    )
+    ap.add_argument(
+        "--retry-backoff", type=float, default=0.5, metavar="S",
+        help="--serve: base retry backoff in seconds (exponential, "
+             "deterministically jittered per rid)",
+    )
+    ap.add_argument(
+        "--partial-results", action="store_true",
+        help="--serve: resolve quarantined / past-deadline requests with "
+             "their best-so-far anytime result (partial=True) instead of "
+             "dropping them",
+    )
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -210,12 +295,13 @@ def main(argv=None) -> int:
         ap.error("--seeds must be >= 1")
     # all seeds' joint searches run as ONE vmapped XLA program
     keys = jnp.stack([jax.random.PRNGKey(s) for s in range(args.seeds)])
+    engine = build_engine(args, mesh)
     t0 = time.time()
     ress = joint_search_batched(
         keys, ws,
         objective=args.objective, area_constr=args.area,
         pop_size=args.pop, generations=args.gens,
-        mesh=mesh, backend=args.backend,
+        mesh=mesh, backend=args.backend, engine=engine,
     )
     dt_all = time.time() - t0
     n_evald = args.seeds * args.pop * (args.gens + 1)
@@ -243,7 +329,7 @@ def main(argv=None) -> int:
                 key2, ws,
                 objective=args.objective, area_constr=args.area,
                 pop_size=args.pop, generations=args.gens,
-                mesh=mesh, backend=args.backend,
+                mesh=mesh, backend=args.backend, engine=engine,
             )
             cross = {}
             for name, r in sep.items():

@@ -4,8 +4,8 @@ from repro.serve.steps import make_decode_step, make_prefill_step  # noqa: F401
 def __getattr__(name):
     # lazy: serve.dse pulls in the whole search stack; LM-serving users
     # (serve.engine / serve.steps) shouldn't pay that import
-    if name in ("AsyncDSEService", "DSEService", "ServiceStats",
-                "paper_request_mix"):
+    if name in ("AsyncDSEService", "DSEService", "RetryPolicy",
+                "ServiceStats", "paper_request_mix"):
         from repro.serve import dse
 
         return getattr(dse, name)

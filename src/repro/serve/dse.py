@@ -58,10 +58,12 @@ import numpy as np
 
 from repro.core.engine import (
     BatchPlan,
+    EngineFault,
     RequestMeta,
     SearchEngine,
     SearchRequest,
     SearchResult,
+    empty_partial_result,
     get_policy,
     plan_batch,
 )
@@ -95,13 +97,25 @@ class ServiceStats:
     experienced; ``deadline_misses`` counts requests completed after
     their absolute deadline (any policy — EDF just minimizes it).
     After an engine failure ``submitted`` stays ahead of ``completed``:
-    failed requests are never counted as served."""
+    failed requests are never counted as served.
+
+    Fault telemetry: ``failures`` counts failed request-attempts (every
+    rid in a failed launch, once per failed attempt), ``retries`` the
+    re-queues a ``RetryPolicy`` scheduled, ``partials`` the requests
+    resolved with an anytime ``partial=True`` result (quarantine or
+    deadline sweep — these DO count as completed), and ``abandoned`` the
+    requests dropped for good with no result (no retry policy / retries
+    exhausted without partial results)."""
 
     submitted: int = 0
     completed: int = 0
     launches: int = 0
     busy_s: float = 0.0  # wall time spent inside execute()
     deadline_misses: int = 0
+    failures: int = 0
+    retries: int = 0
+    partials: int = 0
+    abandoned: int = 0
     wait_samples: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=SAMPLE_WINDOW))
     latency_samples: Deque[float] = dataclasses.field(
@@ -125,7 +139,47 @@ class ServiceStats:
             "latency_p50_s": self.latency_p(50),
             "latency_p99_s": self.latency_p(99),
             "deadline_misses": self.deadline_misses,
+            "failures": self.failures,
+            "retries": self.retries,
+            "partials": self.partials,
+            "abandoned": self.abandoned,
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff with deterministic jitter on the SERVICE clock.
+
+    ``max_attempts`` is the TOTAL launch attempts a request gets (so
+    ``max_attempts=3`` means the original try plus 2 retries); after the
+    n-th failure the retry is scheduled ``delay_s(n, rid)`` seconds out.
+    Jitter is a pure hash of (rid, attempt) — no wall-clock entropy — so
+    a scripted fault drill replays to the exact same schedule."""
+
+    max_attempts: int = 3
+    backoff_s: float = 0.5
+    multiplier: float = 2.0
+    max_backoff_s: float = 30.0
+    jitter: float = 0.1  # +/- fraction of the base delay
+
+    def delay_s(self, attempt: int, rid: int = 0) -> float:
+        base = min(self.backoff_s * self.multiplier ** (max(attempt, 1) - 1),
+                   self.max_backoff_s)
+        if self.jitter <= 0 or base <= 0:
+            return base
+        u = ((rid * 2654435761 + attempt * 40503) % 4096) / 4096.0
+        return base * (1.0 + self.jitter * (2.0 * u - 1.0))
+
+
+@dataclasses.dataclass
+class _Retry:
+    """One queued retry: dispatched alone (re-plan isolation) once the
+    service clock passes ``not_before``."""
+
+    not_before: float
+    rid: int
+    req: SearchRequest
+    attempts: int  # failed attempts so far
 
 
 class DSEService:
@@ -135,7 +189,27 @@ class DSEService:
     ``SchedulingPolicy`` instance; ``clock`` (default ``time.monotonic``)
     is the ONLY time source — submit stamps, waits, deadlines and busy
     time all read it, so a virtual clock makes every scheduling decision
-    and every stat deterministic (tests/sim_scheduler.py)."""
+    and every stat deterministic (tests/sim_scheduler.py).
+
+    Fault tolerance (both OFF by default — behaviour is then exactly the
+    pre-retry service: sync ``step()`` rolls back and re-raises, the
+    async worker fails futures):
+
+      * ``retry`` (a ``RetryPolicy``): a failed launch re-queues each of
+        its requests into an isolated retry lane — every retry is
+        re-planned ALONE, so one poisoned request stops failing its
+        chunk-mates — with exponential backoff on the service clock.  A
+        request that exhausts ``max_attempts`` is quarantined: resolved
+        with its best-so-far partial result (``partial_results=True``) or
+        abandoned into ``self.failed``.
+      * ``partial_results=True``: graceful degradation — a quarantined
+        request, and any queued request observed past its deadline,
+        resolves with its checkpointed/anytime best (``partial=True``,
+        ``EngineFault.partials`` or an empty invalid result) instead of
+        nothing.
+      * ``sleep`` (default ``time.sleep``): how ``drain``/``stream`` wait
+        out retry backoff; the sim passes the virtual clock's ``advance``.
+    """
 
     def __init__(
         self,
@@ -145,10 +219,21 @@ class DSEService:
         max_slots: int = 64,
         policy="fifo",
         clock=time.monotonic,
+        retry: Optional[RetryPolicy] = None,
+        partial_results: bool = False,
+        sleep=None,
     ):
         self.engine = engine or SearchEngine(mesh=mesh, max_slots=max_slots)
         self.policy = get_policy(policy)
         self.clock = clock
+        self.retry = retry
+        self.partial_results = bool(partial_results)
+        self._sleep = time.sleep if sleep is None else sleep
+        # retry lane + per-rid fault bookkeeping
+        self._retry_lane: List[_Retry] = []
+        self._attempts: Dict[int, int] = {}
+        self._partials: Dict[int, SearchResult] = {}  # best-so-far per rid
+        self.failed: Dict[int, BaseException] = {}  # quarantined, no result
         self.queue: List[Tuple[int, SearchRequest]] = []
         self.results: Dict[int, SearchResult] = {}
         self.stats = ServiceStats()
@@ -194,7 +279,7 @@ class DSEService:
         return [self.submit(r) for r in reqs]
 
     def pending(self) -> int:
-        return len(self.queue)
+        return len(self.queue) + len(self._retry_lane)
 
     # --------------------------------------------------------------- serving
     def _plans(self) -> List[BatchPlan]:
@@ -232,7 +317,20 @@ class DSEService:
         (including anything submitted while the launch runs) is free to
         re-plan.  Returns (plan, rids, dispatch stamp); pure queue
         surgery, no device work, so the async front end holds its lock
-        only across this and ``_complete``."""
+        only across this and ``_complete``.
+
+        Due retries dispatch FIRST, one per step, each re-planned alone
+        (quarantine isolation: a poisoned request can only fail its own
+        launch from here on) on the warm slot hints."""
+        now = self.clock()
+        due = [e for e in self._retry_lane if e.not_before <= now]
+        if due:
+            e = min(due, key=lambda e: (e.not_before, e.rid))
+            self._retry_lane.remove(e)
+            plan = plan_batch([e.req], max_slots=self.engine.max_slots,
+                              slot_hints=self._slot_hints)[0]
+            self.stats.wait_samples.append(now - self._submit_s[e.rid])
+            return plan, [e.rid], now
         if not self.queue:
             return None
         plans = self._plans()
@@ -264,11 +362,108 @@ class DSEService:
         """Drop failed in-flight requests for good (async path: their
         futures carry the exception): purge per-rid bookkeeping so a
         long-lived worker that survives engine failures leaks nothing
-        and keeps wait/latency sample counts consistent."""
+        and keeps wait/latency sample counts consistent.  Counted in
+        ``stats.abandoned`` — never silently dropped."""
         self._drop_wait_samples(len(rids))
         for rid in rids:
             self._submit_s.pop(rid, None)
             self._deadline_s.pop(rid, None)
+            self._attempts.pop(rid, None)
+            self._partials.pop(rid, None)
+        self.stats.abandoned += len(rids)
+
+    # -------------------------------------------------- fault tolerance
+    def _next_retry_due(self) -> Optional[float]:
+        if not self._retry_lane:
+            return None
+        return min(e.not_before for e in self._retry_lane)
+
+    def _resolve_partial(self, rid: int, req: SearchRequest,
+                         now: float) -> Tuple[int, SearchResult]:
+        """Resolve a rid with its best-so-far anytime result (stored
+        ``EngineFault`` partial, else an empty invalid one).  Partials
+        count as completions — the rid has a result — and as a deadline
+        miss when applicable."""
+        res = self._partials.pop(rid, None)
+        if res is None:
+            res = empty_partial_result(req)
+        elif getattr(res, "partial", True) is False:
+            res = dataclasses.replace(res, partial=True)
+        self.results[rid] = res
+        self.stats.partials += 1
+        self.stats.completed += 1
+        waited = now - self._submit_s.pop(rid)
+        self.stats.wait_samples.append(waited)
+        self.stats.latency_samples.append(waited)
+        dl = self._deadline_s.pop(rid, None)
+        if dl is not None and now > dl:
+            self.stats.deadline_misses += 1
+        self._attempts.pop(rid, None)
+        return rid, res
+
+    def _sweep_deadlines(self) -> List[Tuple[int, SearchResult]]:
+        """Graceful degradation (``partial_results=True`` only): any
+        QUEUED request — main queue or retry lane — observed past its
+        absolute deadline resolves immediately with its best-so-far
+        partial instead of burning a launch it already missed."""
+        now = self.clock()
+        out: List[Tuple[int, SearchResult]] = []
+
+        def expired(rid: int) -> bool:
+            dl = self._deadline_s.get(rid)
+            return dl is not None and now > dl
+
+        dead = [(rid, req) for rid, req in self.queue if expired(rid)]
+        if dead:
+            gone = {rid for rid, _ in dead}
+            self.queue = [q for q in self.queue if q[0] not in gone]
+            self._plans_cache = None
+        dead += [(e.rid, e.req) for e in self._retry_lane if expired(e.rid)]
+        self._retry_lane = [e for e in self._retry_lane if not expired(e.rid)]
+        for rid, req in dead:
+            out.append(self._resolve_partial(rid, req, now))
+        return out
+
+    def _handle_failure(
+        self, plan: BatchPlan, rids: List[int], exc: BaseException
+    ) -> Tuple[List[Tuple[int, SearchResult]], List[int]]:
+        """The retry-policy failure path for one failed launch: harvest
+        any anytime partials the fault carried, then per request either
+        schedule an isolated backed-off retry, resolve with the partial
+        best (quarantine under ``partial_results``), or abandon into
+        ``self.failed``.  Returns (partial resolutions, abandoned rids)
+        — the async worker fails the latter's futures."""
+        assert self.retry is not None
+        self._drop_wait_samples(len(rids))
+        if isinstance(exc, EngineFault) and exc.partials:
+            for rid, p in zip(rids, exc.partials):
+                if p is not None:
+                    self._partials[rid] = p
+        now = self.clock()
+        resolutions: List[Tuple[int, SearchResult]] = []
+        failed: List[int] = []
+        for rid, req in zip(rids, plan.requests):
+            a = self._attempts.get(rid, 0) + 1
+            self._attempts[rid] = a
+            self.stats.failures += 1
+            if a < self.retry.max_attempts:
+                self._retry_lane.append(_Retry(
+                    not_before=now + self.retry.delay_s(a, rid),
+                    rid=rid, req=req, attempts=a,
+                ))
+                self.stats.retries += 1
+            elif self.partial_results:
+                resolutions.append(self._resolve_partial(rid, req, now))
+            else:
+                self.failed[rid] = exc
+                failed.append(rid)
+        for rid in failed:  # wait samples already dropped above
+            self._submit_s.pop(rid, None)
+            self._deadline_s.pop(rid, None)
+            self._attempts.pop(rid, None)
+            self._partials.pop(rid, None)
+        self.stats.abandoned += len(failed)
+        return resolutions, failed
 
     def _complete(
         self, rids: List[int], results: Sequence[SearchResult], busy_s: float
@@ -286,6 +481,8 @@ class DSEService:
             self.stats.latency_samples.append(now - self._submit_s[rid])
             dl = self._deadline_s.pop(rid, None)
             self._submit_s.pop(rid, None)
+            self._attempts.pop(rid, None)
+            self._partials.pop(rid, None)
             if dl is not None and now > dl:
                 self.stats.deadline_misses += 1
             done.append((rid, res))
@@ -294,28 +491,53 @@ class DSEService:
 
     def step(self) -> List[Tuple[int, SearchResult]]:
         """Run ONE slot-packed launch (the policy's most urgent plan of
-        the current queue); returns that plan's (rid, result) pairs.
-        Requests submitted while a step runs simply join the next plan."""
+        the current queue); returns that plan's (rid, result) pairs —
+        plus, under ``partial_results``, any deadline-swept partial
+        resolutions.  Requests submitted while a step runs simply join
+        the next plan.  With a ``retry`` policy an engine failure is
+        absorbed (retry lane / quarantine) instead of raised."""
+        swept = self._sweep_deadlines() if self.partial_results else []
         d = self._dispatch()
         if d is None:
-            return []
+            return swept
         plan, rids, t0 = d
         try:
             results = self.engine.execute(plan)
+        except Exception as e:
+            if self.retry is None:
+                self._rollback(plan, rids)  # step() stays retryable
+                raise
+            resolutions, _ = self._handle_failure(plan, rids, e)
+            return swept + resolutions
         except BaseException:
-            self._rollback(plan, rids)  # step() stays retryable
+            # KeyboardInterrupt & co: always roll back and surface —
+            # the kill half of the kill/resume contract
+            self._rollback(plan, rids)
             raise
-        return self._complete(rids, results, self.clock() - t0)
+        return swept + self._complete(rids, results, self.clock() - t0)
+
+    def _wait_for_retries(self) -> None:
+        """Nothing dispatchable but retries are backed off: sleep the
+        service clock forward to the next ``not_before``."""
+        nb = self._next_retry_due()
+        if nb is not None:
+            dt = nb - self.clock()
+            if dt > 0:
+                self._sleep(dt)
 
     def stream(self) -> Iterator[Tuple[int, SearchResult]]:
         """Drain, yielding each plan's results as soon as its launch
         finishes — callers overlap their own post-processing with the
         remaining launches."""
-        while self.queue:
-            yield from self.step()
+        while self.pending():
+            out = self.step()
+            yield from out
+            if not out and not self.queue and self.pending():
+                self._wait_for_retries()
 
     def drain(self) -> Dict[int, SearchResult]:
-        """Run the whole queue; returns {rid: SearchResult} for every
+        """Run the whole queue — waiting out retry backoff — until every
+        request has resolved; returns {rid: SearchResult} for every
         request ever completed (incl. prior drains)."""
         for _ in self.stream():
             pass
@@ -353,10 +575,12 @@ class AsyncDSEService:
         policy="fifo",
         clock=time.monotonic,
         paused: bool = False,
+        retry: Optional[RetryPolicy] = None,
+        partial_results: bool = False,
     ):
         self.service = DSEService(
             engine=engine, mesh=mesh, max_slots=max_slots, policy=policy,
-            clock=clock,
+            clock=clock, retry=retry, partial_results=partial_results,
         )
         self._lock = threading.Lock()
         self._wake = threading.Event()
@@ -412,34 +636,65 @@ class AsyncDSEService:
         while True:
             self._wake.wait()
             self._run.wait()
+            svc = self.service
+            retry_wait = None
             with self._lock:
                 if self._closed:
                     return
-                d = self.service._dispatch()
+                swept = (svc._sweep_deadlines()
+                         if svc.partial_results else [])
+                partial_futs = [
+                    (self._futures.pop(rid, None), res) for rid, res in swept
+                ]
+                d = svc._dispatch()
                 if d is None:
-                    self._wake.clear()
-                    if not self._futures:
-                        self._idle.set()
-                    continue
-                plan, rids, t0 = d
+                    nb = svc._next_retry_due()
+                    if nb is None:
+                        self._wake.clear()
+                        if not self._futures:
+                            self._idle.set()
+                    else:
+                        retry_wait = max(nb - svc.clock(), 0.0)
+            # futures resolve OUTSIDE the lock: done-callbacks may submit
+            for f, res in partial_futs:
+                if f is not None:
+                    f.set_result(res)
+            if d is None:
+                if retry_wait is not None:
+                    # backed-off retries pending: nap on the REAL clock (a
+                    # virtual service clock advances externally), bounded
+                    # so external clock advances are picked up promptly
+                    time.sleep(min(retry_wait, 0.05) or 0.001)
+                continue
+            plan, rids, t0 = d
             # the launch runs WITHOUT the lock: submits land concurrently
             # and join the next dispatch's re-plan
             try:
-                results = self.service.engine.execute(plan)
+                results = svc.engine.execute(plan)
             except BaseException as e:  # noqa: BLE001 — fail the futures, keep serving
                 with self._lock:
-                    self.service._abandon(rids)
-                    failed = [self._futures.pop(rid, None) for rid in rids]
+                    if svc.retry is None:
+                        self.service._abandon(rids)
+                        resolved = []
+                        failed = [self._futures.pop(rid, None) for rid in rids]
+                    else:
+                        res2, bad = svc._handle_failure(plan, rids, e)
+                        resolved = [
+                            (self._futures.pop(rid, None), res)
+                            for rid, res in res2
+                        ]
+                        failed = [self._futures.pop(rid, None) for rid in bad]
                 # exceptions set OUTSIDE the lock: done-callbacks fire on
                 # failure too, and they may submit (which takes the lock)
+                for f, res in resolved:
+                    if f is not None:
+                        f.set_result(res)
                 for f in failed:
                     if f is not None:
                         f.set_exception(e)
                 continue
             with self._lock:
-                done = self.service._complete(
-                    rids, results, self.service.clock() - t0
-                )
+                done = svc._complete(rids, results, svc.clock() - t0)
                 futs = [(self._futures.pop(rid, None), res) for rid, res in done]
             # resolve OUTSIDE the lock: done-callbacks may submit
             for f, res in futs:
@@ -448,25 +703,44 @@ class AsyncDSEService:
 
     def drain(self, timeout: Optional[float] = None) -> Dict[int, SearchResult]:
         """Block until the queue and all in-flight launches are done;
-        returns the service's full {rid: result} map."""
+        returns the service's full {rid: result} map.  On timeout raises
+        ``TimeoutError`` naming every unresolved rid."""
         if not self._idle.wait(timeout):
+            with self._lock:
+                unresolved = sorted(self._futures)
             raise TimeoutError(
-                f"drain timed out with {self.service.pending()} queued"
+                f"drain timed out with {len(unresolved)} unresolved "
+                f"rids: {unresolved}"
             )
         return self.service.results
 
-    def close(self):
-        """Finish in-flight work, then stop the worker."""
+    def close(self, timeout: Optional[float] = None):
+        """Finish in-flight work, then stop the worker.  Idempotent — a
+        second close is a no-op.  With ``timeout``, a drain that cannot
+        finish in time stops waiting and CANCELS every unresolved future
+        (``Future.result()`` then raises ``CancelledError``), so a close
+        racing an in-flight launch still leaves no future dangling."""
+        with self._lock:
+            if self._closed:
+                return
         if self._run.is_set():
-            self.drain()
+            try:
+                self.drain(timeout)
+            except TimeoutError:
+                pass  # leftovers are cancelled below
         with self._lock:
             self._closed = True
+            leftovers = list(self._futures.values())
+            self._futures.clear()
         self._run.set()
         self._wake.set()
-        self._worker.join()
-        for f in self._futures.values():  # paused close: never launched
+        # cancel BEFORE joining: the worker may still be inside a launch
+        # (its pops see an empty future map and skip), and callers
+        # blocked on result() unblock without waiting the launch out
+        for f in leftovers:
             f.cancel()
-        self._futures.clear()
+        if threading.current_thread() is not self._worker:
+            self._worker.join()
 
     def __enter__(self) -> "AsyncDSEService":
         return self

@@ -32,8 +32,8 @@ from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.engine import BatchPlan, SearchRequest
-from repro.serve.dse import DSEService
+from repro.core.engine import BatchPlan, EngineFault, NonFiniteScoreError, SearchRequest
+from repro.serve.dse import DSEService, RetryPolicy
 from repro.workloads.pack import WorkloadSet
 
 
@@ -91,11 +91,14 @@ def sim_request(
 @dataclasses.dataclass(frozen=True)
 class SimResult:
     """Stands in for a SearchResult; echoes enough of the request that a
-    test can assert every rid got the result of ITS OWN request."""
+    test can assert every rid got the result of ITS OWN request.
+    ``partial`` mirrors ``SearchResult.partial`` so the fault-injection
+    tests can tell a full result from an anytime one."""
 
     seed: int
     workload_names: Tuple[str, ...]
     priority: int
+    partial: bool = False
 
 
 @dataclasses.dataclass
@@ -127,9 +130,11 @@ class StubEngine:
         self.launch_s = launch_s
         self.launches: List[SimLaunch] = []
 
-    def execute(self, plan: BatchPlan, *, mesh=None) -> List[SimResult]:
+    def execute(self, plan: BatchPlan, *, mesh=None,
+                dt: Optional[float] = None) -> List[SimResult]:
         t0 = self.clock()
-        dt = self.launch_s(plan) if callable(self.launch_s) else self.launch_s
+        if dt is None:
+            dt = self.launch_s(plan) if callable(self.launch_s) else self.launch_s
         self.clock.advance(dt)
         self.launches.append(SimLaunch(
             seeds=[r.seed for r in plan.requests],
@@ -145,16 +150,100 @@ class StubEngine:
         ]
 
 
+@dataclasses.dataclass
+class SimFault:
+    """One recorded FaultyEngine fault (a launch that did NOT complete)."""
+
+    kind: str  # "fail" | "nan"
+    start_s: float
+    seeds: List[int]
+
+
+class FaultyEngine(StubEngine):
+    """StubEngine with scripted fault injection — the zero-XLA twin of
+    the segmented engine's failure modes, driven on the virtual clock.
+
+    ``script`` is consumed one entry per ``execute`` call, in launch
+    order (exhausted script -> "ok"):
+
+      * ``"ok"``           — normal launch (``launch_s`` duration)
+      * ``"fail"``         — the launch dies after ``fail_s`` virtual
+        seconds with an ``EngineFault``
+      * ``"nan"``          — the per-launch NaN score guard fires
+        (``NonFiniteScoreError``)
+      * ``("slow", dt)``   — a normal launch taking ``dt`` seconds
+
+    ``poison_seeds``: any launch containing one of these request seeds
+    fails with the NaN guard REGARDLESS of the script — a persistently
+    poisoned request, the quarantine scenario: it keeps failing every
+    chunk it rides in until the service isolates and quarantines it.
+
+    ``partials=True`` attaches per-request anytime ``SimResult``s
+    (``partial=True``) to every raised fault, mirroring
+    ``EngineFault.partials`` from the real segmented engine."""
+
+    def __init__(self, clock, *, script: Sequence = (), fail_s: float = 0.1,
+                 poison_seeds: Sequence[int] = (), partials: bool = True, **kw):
+        super().__init__(clock, **kw)
+        self.script = list(script)
+        self._cursor = 0
+        self.fail_s = float(fail_s)
+        self.poison_seeds = set(poison_seeds)
+        self.partials = partials
+        self.faults: List[SimFault] = []
+
+    def _next_behavior(self):
+        if self._cursor < len(self.script):
+            b = self.script[self._cursor]
+            self._cursor += 1
+            return b if isinstance(b, tuple) else (b,)
+        return ("ok",)
+
+    def _raise_fault(self, kind: str, plan: BatchPlan):
+        t0 = self.clock()
+        self.clock.advance(self.fail_s)
+        self.faults.append(SimFault(
+            kind=kind, start_s=t0, seeds=[r.seed for r in plan.requests]))
+        partials = None
+        if self.partials:
+            partials = [
+                SimResult(seed=r.seed, workload_names=r.ws.names,
+                          priority=r.priority, partial=True)
+                for r in plan.requests
+            ]
+        cls = NonFiniteScoreError if kind == "nan" else EngineFault
+        raise cls(f"injected {kind} at t={t0}", partials=partials)
+
+    def execute(self, plan: BatchPlan, *, mesh=None) -> List[SimResult]:
+        if self.poison_seeds & {r.seed for r in plan.requests}:
+            self._raise_fault("nan", plan)
+        b = self._next_behavior()
+        if b[0] in ("fail", "nan"):
+            self._raise_fault(b[0], plan)
+        if b[0] == "slow":
+            return super().execute(plan, mesh=mesh, dt=float(b[1]))
+        return super().execute(plan, mesh=mesh)
+
+
 def sim_service(
     *,
     policy="fifo",
     max_slots: int = 4,
     launch_s: Union[float, Callable[[BatchPlan], float]] = 1.0,
     t0: float = 0.0,
+    retry: Optional[RetryPolicy] = None,
+    partial_results: bool = False,
+    engine_cls=StubEngine,
+    **engine_kw,
 ) -> Tuple[DSEService, VirtualClock, StubEngine]:
+    """A service on the virtual clock.  ``engine_cls=FaultyEngine`` (plus
+    its kwargs) wires in fault injection; ``sleep`` is the clock's own
+    ``advance``, so drains wait out retry backoff in simulated time."""
     clock = VirtualClock(t0)
-    stub = StubEngine(clock, max_slots=max_slots, launch_s=launch_s)
-    svc = DSEService(engine=stub, policy=policy, clock=clock)
+    stub = engine_cls(clock, max_slots=max_slots, launch_s=launch_s,
+                      **engine_kw)
+    svc = DSEService(engine=stub, policy=policy, clock=clock, retry=retry,
+                     partial_results=partial_results, sleep=clock.advance)
     return svc, clock, stub
 
 

@@ -1,0 +1,358 @@
+"""Deterministic fault drills for the DSE service (virtual clock, no XLA).
+
+Driven entirely through tests/sim_scheduler.py's ``FaultyEngine``:
+scripted launch failures, NaN-guard trips, persistently poisoned
+requests and slow launches, all on the virtual clock — so every retry
+delay, quarantine decision and partial resolution is an exact number.
+
+The centrepiece is the ISSUE's acceptance drill: a 256-request mixed
+drain with poisoned chunks, a scripted transient failure, a slow launch
+and short-deadline stragglers completes with EVERY rid resolved, exact
+failure/retry/partial/deadline counts in ``ServiceStats``, and no
+deadlock or bookkeeping leak.  The async twin pins future resolution
+(including exceptions and cancellation on close) with no future leak.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core.engine import EngineFault
+from repro.serve.dse import AsyncDSEService, DSEService, RetryPolicy
+from sim_scheduler import (
+    FaultyEngine,
+    StubEngine,
+    VirtualClock,
+    sim_request,
+    sim_service,
+    submit_burst,
+)
+
+
+def _leak_free(svc: DSEService):
+    """Every per-rid map and lane must be empty after a full drain."""
+    assert svc.queue == [] and svc._retry_lane == []
+    assert svc._attempts == {} and svc._partials == {}
+    assert svc._submit_s == {} and svc._deadline_s == {}
+
+
+# ----------------------------------------------------------- RetryPolicy math
+def test_retry_policy_deterministic_backoff():
+    p = RetryPolicy(max_attempts=5, backoff_s=1.0, multiplier=2.0,
+                    max_backoff_s=5.0, jitter=0.1)
+    for attempt in (1, 2, 3):
+        base = min(1.0 * 2.0 ** (attempt - 1), 5.0)
+        d = p.delay_s(attempt, rid=7)
+        assert d == p.delay_s(attempt, rid=7)  # pure: replays identically
+        assert base * 0.9 <= d <= base * 1.1  # within the jitter band
+    # capped at max_backoff (+ jitter), and jitter varies with rid
+    assert p.delay_s(10, rid=0) <= 5.0 * 1.1
+    assert len({p.delay_s(1, rid=r) for r in range(8)}) > 1
+    # jitter=0 is the exact exponential schedule
+    q = RetryPolicy(backoff_s=0.5, multiplier=2.0, jitter=0.0)
+    assert [q.delay_s(a) for a in (1, 2, 3)] == [0.5, 1.0, 2.0]
+
+
+# ------------------------------------------------------------- retry recovery
+def test_failed_launch_retries_each_request_alone():
+    svc, clock, eng = sim_service(
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.5, jitter=0.0),
+        engine_cls=FaultyEngine, script=["fail"],
+    )
+    rids = submit_burst(svc, 4)
+    res = svc.drain()
+    assert sorted(res) == rids
+    assert all(res[r].seed == r and not res[r].partial for r in rids)
+    st = svc.stats
+    assert (st.failures, st.retries, st.partials, st.abandoned) == (4, 4, 0, 0)
+    assert st.completed == 4 and svc.failed == {}
+    # the chunk failed once; each rid then relaunched ALONE
+    assert len(eng.faults) == 1 and eng.faults[0].seeds == rids
+    assert [l.seeds for l in eng.launches] == [[r] for r in rids]
+    # deterministic schedule: fail at t=0.1, jitter-free backoff 0.5 ->
+    # first retry dispatches at exactly 0.6, then 1s per launch
+    assert [l.start_s for l in eng.launches] == [0.6, 1.6, 2.6, 3.6]
+    _leak_free(svc)
+
+
+def test_backoff_schedule_matches_policy_exactly():
+    pol = RetryPolicy(max_attempts=3, backoff_s=1.0, multiplier=2.0,
+                      jitter=0.1)
+    svc, clock, eng = sim_service(
+        retry=pol, partial_results=True,
+        engine_cls=FaultyEngine, poison_seeds=[0],
+    )
+    (rid,) = submit_burst(svc, 1)
+    res = svc.drain()
+    # every attempt failed -> quarantined with its anytime partial
+    assert res[rid].partial and res[rid].seed == rid
+    st = svc.stats
+    assert (st.failures, st.retries, st.partials) == (3, 2, 1)
+    assert st.completed == 1 and st.abandoned == 0
+    # fault start times = the policy's exact jittered schedule: each
+    # attempt dies 0.1s in, the next starts delay_s(attempt, rid) later
+    t1 = 0.1 + pol.delay_s(1, rid)
+    t2 = t1 + 0.1 + pol.delay_s(2, rid)
+    assert [f.start_s for f in eng.faults] == [0.0, t1, t2]
+    _leak_free(svc)
+
+
+def test_poisoned_request_is_quarantined_chunk_mates_recover():
+    svc, clock, eng = sim_service(
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.5, jitter=0.0),
+        partial_results=True, engine_cls=FaultyEngine, poison_seeds=[2],
+    )
+    rids = submit_burst(svc, 4)
+    res = svc.drain()
+    # chunk fails once (4 failures); isolated retries: 3 clean full
+    # results + the poisoned one fails again (5th failure) -> quarantined
+    st = svc.stats
+    assert (st.failures, st.retries, st.partials) == (5, 4, 1)
+    assert st.completed == 4 and st.abandoned == 0
+    for r in rids:
+        assert res[r].seed == r
+        assert res[r].partial == (r == 2)
+    # the poisoned rid only ever failed its own isolated launch after the
+    # first chunk - its chunk-mates never saw a second failure
+    assert [sorted(f.seeds) for f in eng.faults] == [[0, 1, 2, 3], [2]]
+    _leak_free(svc)
+
+
+def test_retry_exhaustion_without_partials_abandons():
+    svc, clock, eng = sim_service(
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.5, jitter=0.0),
+        partial_results=False, engine_cls=FaultyEngine, poison_seeds=[1],
+    )
+    rids = submit_burst(svc, 2)
+    res = svc.drain()
+    assert sorted(res) == [0] and res[0].seed == 0
+    assert 1 in svc.failed and isinstance(svc.failed[1], EngineFault)
+    st = svc.stats
+    assert (st.failures, st.retries, st.partials, st.abandoned) == (3, 2, 0, 1)
+    assert st.completed == 1
+    _leak_free(svc)
+
+
+# ------------------------------------------------------------ deadline sweeps
+def test_expired_queued_request_resolves_partial():
+    svc, clock, eng = sim_service(partial_results=True)
+    rid_late = svc.submit(sim_request(0, deadline_s=0.5))
+    rid_ok = svc.submit(sim_request(1))
+    clock.advance(1.0)  # rid_late expires before any launch
+    done = svc.step()
+    # one step returns BOTH the swept partial and the launched result
+    assert sorted(r for r, _ in done) == [rid_late, rid_ok]
+    res = dict(done)
+    assert res[rid_late].partial and not res[rid_ok].partial
+    st = svc.stats
+    assert st.deadline_misses == 1 and st.partials == 1 and st.completed == 2
+    assert eng.launches[0].seeds == [1]  # the expired rid never launched
+    _leak_free(svc)
+
+
+def test_expired_retry_lane_request_is_swept():
+    svc, clock, eng = sim_service(
+        retry=RetryPolicy(max_attempts=3, backoff_s=10.0, jitter=0.0),
+        partial_results=True, engine_cls=FaultyEngine, script=["fail"],
+    )
+    (rid,) = [svc.submit(sim_request(0, deadline_s=2.0))]
+    svc.step()  # fails; retry parked until t=10.1 > deadline
+    clock.advance(5.0)
+    done = svc.step()  # sweep fires before any dispatch
+    assert [r for r, _ in done] == [rid] and done[0][1].partial
+    st = svc.stats
+    assert st.deadline_misses == 1 and st.partials == 1
+    assert (st.failures, st.retries) == (1, 1)
+    _leak_free(svc)
+
+
+def test_without_partial_results_no_sweep():
+    # graceful degradation is opt-in: the default service still completes
+    # late requests fully (and only counts the miss)
+    svc, clock, eng = sim_service()
+    rid = svc.submit(sim_request(0, deadline_s=0.5))
+    clock.advance(1.0)
+    res = svc.drain()
+    assert not res[rid].partial and svc.stats.deadline_misses == 1
+    assert svc.stats.partials == 0
+
+
+# ------------------------------------------------- acceptance: 256-mix drill
+def test_256_request_fault_drill_exact_accounting():
+    """The ISSUE's deterministic fault drill: 256 fifo requests in 16-slot
+    chunks; 3 poisoned seeds in distinct chunks, one scripted transient
+    chunk failure, one slow launch, 4 short-deadline stragglers.  The
+    drain must terminate with every rid resolved and exact stats."""
+    pol = RetryPolicy(max_attempts=2, backoff_s=0.25, multiplier=2.0,
+                      jitter=0.1)
+    svc, clock, eng = sim_service(
+        max_slots=16, retry=pol, partial_results=True,
+        engine_cls=FaultyEngine,
+        poison_seeds=[5, 37, 101],  # chunks 0, 2 and 6
+        script=["fail", ("slow", 5.0)],  # chunk 1 dies once, chunk 3 crawls
+    )
+    rids = submit_burst(svc, 252)
+    rids += [svc.submit(sim_request(252 + i, deadline_s=0.5))
+             for i in range(4)]
+    res = svc.drain()
+
+    # every rid resolved, none abandoned, and the drain terminated
+    assert sorted(res) == rids and svc.failed == {}
+    st = svc.stats
+    assert st.submitted == 256 and st.completed == 256 and st.abandoned == 0
+    # failures: 4 chunk failures (3 poisoned + 1 scripted) x 16 rids,
+    # plus the 3 poisoned isolated retries
+    assert st.failures == 4 * 16 + 3
+    # retries: every rid of a failed chunk got exactly one (max_attempts=2)
+    assert st.retries == 4 * 16
+    # partials: 3 quarantined poisoned rids + 4 deadline-swept stragglers
+    assert st.partials == 7
+    assert st.deadline_misses == 4
+    # launches (successes only): 12 clean chunks + 61 isolated retries
+    # (16 from the scripted chunk + 15 clean per poisoned chunk)
+    assert st.launches == 12 + 16 + 3 * 15
+    # fault log: 4 chunk-sized faults + 3 single-rid (isolated) faults
+    assert sorted(len(f.seeds) for f in eng.faults) == [1, 1, 1, 16, 16, 16, 16]
+    # partial vs full results land exactly where the drill says
+    partial_rids = {5, 37, 101, 252, 253, 254, 255}
+    for r in rids:
+        assert res[r].partial == (r in partial_rids), r
+        if r not in (252, 253, 254, 255):  # swept rids resolve empty
+            assert res[r].seed == r
+    # the deadline stragglers never launched
+    launched = {s for l in eng.launches for s in l.seeds}
+    assert launched.isdisjoint({252, 253, 254, 255})
+    # telemetry samples stayed consistent (one wait + one latency per rid)
+    assert len(st.wait_samples) == 256 and len(st.latency_samples) == 256
+    _leak_free(svc)
+
+
+# ------------------------------------------------------------------- async
+def _async_sim(**kw):
+    clock = VirtualClock()
+    eng_kw = {k: kw.pop(k) for k in ("script", "poison_seeds", "max_slots")
+              if k in kw}
+    eng = FaultyEngine(clock, **eng_kw)
+    svc = AsyncDSEService(engine=eng, clock=clock, paused=True, **kw)
+    return svc, clock, eng
+
+
+def test_async_retry_resolves_futures():
+    svc, clock, eng = _async_sim(
+        script=["fail"], max_slots=4,
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.0, jitter=0.0),
+    )
+    futs = [svc.submit(sim_request(i)) for i in range(4)]
+    svc.resume()
+    svc.drain(timeout=60)
+    assert [f.result(timeout=1).seed for f in futs] == [0, 1, 2, 3]
+    assert all(not f.result().partial for f in futs)
+    st = svc.stats
+    assert (st.failures, st.retries, st.completed) == (4, 4, 4)
+    assert svc._futures == {}  # no future leak
+    svc.close()
+
+
+def test_async_quarantine_resolves_future_with_partial():
+    svc, clock, eng = _async_sim(
+        poison_seeds=[1], max_slots=4, partial_results=True,
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.0, jitter=0.0),
+    )
+    futs = [svc.submit(sim_request(i)) for i in range(3)]
+    svc.resume()
+    svc.drain(timeout=60)
+    assert [f.result(timeout=1).partial for f in futs] == [False, True, False]
+    assert futs[1].result().seed == 1  # the anytime partial echoes its rid
+    st = svc.stats
+    assert (st.partials, st.abandoned, st.completed) == (1, 0, 3)
+    assert svc._futures == {}
+    svc.close()
+
+
+def test_async_abandoned_requests_visible_in_stats():
+    # no retry policy: a failed launch fails its futures AND is counted
+    svc, clock, eng = _async_sim(script=["fail"], max_slots=4)
+    futs = [svc.submit(sim_request(i)) for i in range(2)]
+    svc.resume()
+    svc.drain(timeout=60)
+    for f in futs:
+        with pytest.raises(EngineFault):
+            f.result(timeout=1)
+    assert svc.stats.abandoned == 2 and svc.stats.completed == 0
+    # the service keeps serving after the failure
+    ok = svc.submit(sim_request(9))
+    assert ok.result(timeout=60).seed == 9
+    assert "abandoned" in svc.stats.summary()
+    svc.close()
+
+
+def test_async_32_request_drill_no_future_leak():
+    svc, clock, eng = _async_sim(
+        poison_seeds=[3, 17], max_slots=8, partial_results=True,
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.0, jitter=0.0),
+    )
+    futs = [svc.submit(sim_request(i)) for i in range(32)]
+    svc.resume()
+    res = svc.drain(timeout=120)
+    assert len(res) == 32 and svc._futures == {}
+    for i, f in enumerate(futs):
+        assert f.result(timeout=1).seed == i
+        assert f.result().partial == (i in (3, 17))
+    st = svc.stats
+    # 2 poisoned chunks fail once each (8 rids), poisoned rids fail again
+    assert (st.failures, st.retries, st.partials) == (2 * 8 + 2, 16, 2)
+    assert st.completed == 32 and st.abandoned == 0
+    _leak_free(svc.service)
+    svc.close()
+
+
+# ---------------------------------------------------------- close hardening
+class _BlockingEngine(StubEngine):
+    """Blocks every execute until ``release`` is set (bounded), so tests
+    can hold a launch in flight across a close/drain deterministically."""
+
+    def __init__(self, clock, release: threading.Event, **kw):
+        super().__init__(clock, **kw)
+        self.release = release
+
+    def execute(self, plan, *, mesh=None):
+        self.release.wait(10.0)
+        return super().execute(plan, mesh=mesh)
+
+
+def test_async_close_is_idempotent():
+    svc, clock, eng = _async_sim(max_slots=4)
+    svc.resume()
+    fut = svc.submit(sim_request(0))
+    assert fut.result(timeout=60).seed == 0
+    svc.close()
+    svc.close()  # second close: no-op, no hang
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(sim_request(1))
+
+
+def test_async_close_while_in_flight_cancels_futures():
+    clock = VirtualClock()
+    release = threading.Event()
+    eng = _BlockingEngine(clock, release, max_slots=4)
+    svc = AsyncDSEService(engine=eng, clock=clock)
+    fut = svc.submit(sim_request(0))
+    time.sleep(0.05)  # let the worker enter the blocked launch
+    threading.Timer(0.3, release.set).start()
+    svc.close(timeout=0.1)  # drain cannot finish -> cancel, then join
+    with pytest.raises(Exception) as ei:
+        fut.result(timeout=1)
+    assert ei.type.__name__ == "CancelledError"
+
+
+def test_async_drain_timeout_names_unresolved_rids():
+    clock = VirtualClock()
+    release = threading.Event()
+    eng = _BlockingEngine(clock, release, max_slots=4)
+    svc = AsyncDSEService(engine=eng, clock=clock)
+    fut = svc.submit(sim_request(0))
+    with pytest.raises(TimeoutError, match=r"rids: \[0\]"):
+        svc.drain(timeout=0.1)
+    release.set()
+    assert fut.result(timeout=10).seed == 0
+    svc.close()

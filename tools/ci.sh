@@ -17,6 +17,13 @@
 #                                  # through AsyncDSEService, futures all
 #                                  # finite) — plus the virtual-clock
 #                                  # scheduler-sim suite
+#   bash tools/ci.sh fault-smoke   # anytime fault-tolerance gate: the
+#                                  # segmented-GA parity + checkpoint/
+#                                  # resume suite, the fault-injection
+#                                  # sim suite (retry/backoff/quarantine/
+#                                  # partials on the virtual clock), and
+#                                  # the retry lane recovering injected
+#                                  # chunk faults over the REAL engine
 #
 # The scheduler-sim suite (tests/test_scheduler_sim.py) is part of the
 # plain pytest run, so it executes in BOTH the tier-1 (1-device) and
@@ -39,6 +46,9 @@ elif [[ "${1:-}" == "bench-smoke" ]]; then
 elif [[ "${1:-}" == "serve-smoke" ]]; then
   python -m pytest -x -q tests/test_scheduler_sim.py
   python -m benchmarks.bench_dse_service --smoke
+elif [[ "${1:-}" == "fault-smoke" ]]; then
+  python -m pytest -x -q tests/test_fault_sim.py tests/test_ga_segments.py
+  python -m benchmarks.bench_dse_service --fault-smoke
 else
   python -m pytest -x -q
   python -m benchmarks.run --quick
