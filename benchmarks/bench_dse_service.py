@@ -29,9 +29,15 @@ and an async leg (mixed-priority ``AsyncDSEService`` drain, futures all
 finite).  ``--fault-smoke`` is the CI fault-tolerance leg: every chunk
 launch over the REAL engine fails once with a transient ``EngineFault``
 and the retry lane must recover every request to a full finite result
-(see ``fault_smoke``).  ``python -m benchmarks.bench_dse_service``
-appends the ``service`` row of ``experiments/search_throughput.json``
-(see benchmarks/README.md for the methodology).
+(see ``fault_smoke``).  ``--cache-smoke`` is the CI cache leg: a
+cache-armed service drains the paper mix, then the IDENTICAL mix is
+resubmitted — sync and async — and every request must resolve from the
+result cache with ZERO new GA launches and bit-identical results (see
+``cache_smoke``).  ``python -m benchmarks.bench_dse_service`` appends
+the ``service`` row of ``experiments/search_throughput.json`` and
+``--cache`` the ``cache`` row (cold populate vs hot all-hits drain —
+the request-overlap throughput ceiling; see benchmarks/README.md for
+the methodology).
 """
 from __future__ import annotations
 
@@ -40,6 +46,11 @@ import time
 
 PAPER_S_PER_DESIGN = 36.0
 POP, GENS = 40, 10
+
+
+def _fmt(v, spec: str = ".2f") -> str:
+    """Format a possibly-``None`` percentile (empty sample window)."""
+    return "n/a" if v is None else f"{v:{spec}}"
 
 
 def _program_cache_sizes() -> int:
@@ -102,7 +113,7 @@ def run(quick: bool = False, verbose: bool = True, mesh=None,
               f"({programs} programs), warm {warm:.2f}s -> "
               f"{n/warm:.1f} req/s e2e ({st.requests_per_s():.1f} busy), "
               f"{n*per_search/warm:.0f} designs/s, latency p50/p99 "
-              f"{st.latency_p(50):.2f}/{st.latency_p(99):.2f}s "
+              f"{_fmt(st.latency_p(50))}/{_fmt(st.latency_p(99))}s "
               f"({svc.stats.launches} launches/drain)")
     return out
 
@@ -184,8 +195,134 @@ def smoke(n: int = 32) -> int:
     st = async_svc.stats
     assert len(st.latency_samples) == n and len(st.wait_samples) == n
     print(f"[dse-service] smoke: async priority leg {n}/{n} futures "
-          f"finite (latency p99 {st.latency_p(99):.2f}s)")
+          f"finite (latency p99 {_fmt(st.latency_p(99))}s)")
     return 0
+
+
+def _assert_bit_equal(a, b, ctx: str = "") -> None:
+    """Two SearchResults must match bit-for-bit (the cache-hit contract:
+    a cached answer is THE answer, not an approximation of it)."""
+    import numpy as np
+
+    assert a.objective == b.objective and a.workload_names == b.workload_names
+    assert a.valid == b.valid and a.partial == b.partial
+    assert a.top_designs == b.top_designs, ctx
+    for name in ("top_scores", "top_genomes", "convergence"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=f"{ctx}: {name} differs")
+    for name in ("genomes", "scores", "best_genome", "best_score"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.ga, name)), np.asarray(getattr(b.ga, name)),
+            err_msg=f"{ctx}: ga.{name} differs")
+
+
+def cache_smoke(n: int = 32) -> int:
+    """CI cache-smoke: the zero-launch hot-repeat contract, end to end.
+
+    A cache-armed sync service drains the paper mix cold, then the
+    IDENTICAL mix is resubmitted — every request must resolve at submit
+    (``stats.cache_hits == n``) with ZERO new GA launches and results
+    bit-identical to the cold drain.  An ``AsyncDSEService`` sharing the
+    same cache then repeats the mix a third time: all futures arrive
+    already resolved, its service never launches at all.
+    """
+    from repro.serve.cache import ResultCache
+    from repro.serve.dse import AsyncDSEService, DSEService, paper_request_mix
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    ws = pack_workloads([(nm, cnn_workload(nm)) for nm in PAPER_WORKLOADS])
+    mix = lambda: paper_request_mix(  # noqa: E731 — the one mix, three times
+        ws, n, backend="table", pop_size=40, generations=6)
+    cache = ResultCache()
+    svc = DSEService(result_cache=cache)
+    rids = svc.submit_all(mix())
+    cold = dict(svc.drain())
+    _assert_all_finite(rids, cold)
+    launches = svc.stats.launches
+    assert svc.stats.cache_hits == 0 and len(cache) == n
+
+    rids2 = svc.submit_all(mix())
+    hot = svc.drain()
+    assert svc.stats.launches == launches, \
+        f"hot resubmit launched GA work ({svc.stats.launches - launches})"
+    assert svc.stats.cache_hits == n, svc.stats.cache_hits
+    for r1, r2 in zip(rids, rids2):
+        _assert_bit_equal(cold[r1], hot[r2], f"sync rid {r1}->{r2}")
+    print(f"[dse-service] cache-smoke: sync hot resubmit {n}/{n} hits, "
+          f"0 new launches, bit-identical ({cache.stats.summary()})")
+
+    with AsyncDSEService(result_cache=cache) as async_svc:
+        futs = async_svc.submit_all(mix())
+        async_res = [f.result(timeout=600) for f in futs]
+    assert async_svc.stats.launches == 0, async_svc.stats.launches
+    assert async_svc.stats.cache_hits == n
+    for r1, res in zip(rids, async_res):
+        _assert_bit_equal(cold[r1], res, f"async rid {r1}")
+    print(f"[dse-service] cache-smoke: async resubmit {n}/{n} futures "
+          f"pre-resolved, 0 launches, bit-identical")
+    return 0
+
+
+def cache_run(quick: bool = False, verbose: bool = True) -> dict:
+    """The ``cache`` row: cold populate vs hot all-hits drain.
+
+    Same mix and operating point as the ``service`` row, through a
+    cache-armed service: the cold drain runs every GA search and fills
+    the cache, then ``warm_reps`` hot drains resubmit the identical mix
+    — all hits, zero launches — and the best one is the row's hot
+    number.  The hot/cold ratio is the throughput ceiling request
+    overlap buys (a real stream sits in between, set by its hit rate).
+    """
+    from repro.serve.cache import ResultCache
+    from repro.serve.dse import DSEService, paper_request_mix
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    ws = pack_workloads([(nm, cnn_workload(nm)) for nm in PAPER_WORKLOADS])
+    n = 64 if quick else 256
+    warm_reps = 2 if quick else 3
+    per_search = POP * (GENS + 1)
+    cache = ResultCache(capacity=2 * n)
+    svc = DSEService(result_cache=cache)
+    mix = paper_request_mix(ws, n, backend="table", pop_size=POP,
+                            generations=GENS)
+
+    t0 = time.time()
+    svc.submit_all(mix)
+    svc.drain()
+    cold = time.time() - t0
+    launches_cold = svc.stats.launches
+
+    hot = float("inf")
+    for _ in range(warm_reps):
+        t0 = time.time()
+        rids = svc.submit_all(mix)
+        res = svc.drain()
+        hot = min(hot, time.time() - t0)
+        assert all(r in res for r in rids)
+    assert svc.stats.launches == launches_cold, "hot drains launched GA work"
+    assert svc.stats.cache_hits == warm_reps * n
+
+    out = {
+        "requests": n, "pop": POP, "gens": GENS, "backend": "table",
+        "warm_reps": warm_reps,
+        "cold_s": cold,  # populate: every search launched
+        "hot_s": hot,  # all hits: zero launches
+        "cold_requests_per_s": n / cold,
+        "hot_requests_per_s": n / hot,
+        "hot_designs_per_s": n * per_search / hot,
+        "hot_vs_cold_speedup": cold / hot,
+        "launches_cold": launches_cold,
+        "launches_hot": 0,
+        "cache": cache.stats.summary(),
+    }
+    if verbose:
+        print(f"[dse-service] cache: {n} mixed requests cold {cold:.2f}s "
+              f"({launches_cold} launches) -> hot {hot:.3f}s all-hits "
+              f"({n/hot:.0f} req/s, {cold/hot:.0f}x, 0 launches)")
+    return out
 
 
 def fault_smoke(n: int = 16) -> int:
@@ -259,6 +396,14 @@ def main(argv=None) -> int:
                     help="CI fault-smoke: every chunk launch fails once "
                          "over the REAL engine; the retry lane must "
                          "recover all requests fully; records nothing")
+    ap.add_argument("--cache-smoke", action="store_true",
+                    help="CI cache-smoke: resubmit an identical mix "
+                         "through a cache-armed service (sync + async); "
+                         "zero new launches, bit-identical results; "
+                         "records nothing")
+    ap.add_argument("--cache", action="store_true",
+                    help="record the 'cache' row: cold populate vs hot "
+                         "all-hits drain of the same mix")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument(
         "--mesh", nargs="?", const="auto", default=None, metavar="SEARCHxPOP",
@@ -270,6 +415,11 @@ def main(argv=None) -> int:
         return smoke(args.requests or 32)
     if args.fault_smoke:
         return fault_smoke(args.requests or 16)
+    if args.cache_smoke:
+        return cache_smoke(args.requests or 32)
+    if args.cache:
+        write_search_throughput(cache_run(quick=args.quick), row="cache")
+        return 0
     mesh = prepare_search_mesh(args.mesh) if args.mesh else None
     res = run(quick=args.quick, mesh=mesh, n_requests=args.requests)
     if mesh is not None:

@@ -46,7 +46,7 @@ def prepare_search_mesh(spec: str):
 
 
 # named rows kept alongside the top-level (dense, unsharded) trajectory
-EXTRA_ROWS = ("sharded", "table", "service")
+EXTRA_ROWS = ("sharded", "table", "service", "cache")
 
 
 def write_search_throughput(res: dict, *, row: str = None) -> Path:

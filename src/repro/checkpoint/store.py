@@ -121,6 +121,21 @@ def clear(ckpt_dir: str | Path) -> None:
     shutil.rmtree(Path(ckpt_dir), ignore_errors=True)
 
 
+def scan(root: str | Path) -> list:
+    """Names of child directories under ``root`` holding at least one
+    COMMITTED step — the content keys a keyed store (checkpoint roots,
+    the DSE result cache's disk tier) can currently serve.  Uncommitted
+    (crashed mid-save) children are invisible, exactly like
+    ``restore``'s view of a single directory."""
+    root = Path(root)
+    if not root.exists():
+        return []
+    return sorted(
+        p.name for p in root.iterdir()
+        if p.is_dir() and latest_step(p) is not None
+    )
+
+
 def restore_resharded(
     ckpt_dir: str | Path,
     template: PyTree,

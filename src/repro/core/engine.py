@@ -497,15 +497,20 @@ class BatchPlan:
 
 def plan_key(plan: BatchPlan) -> str:
     """Content hash of everything that determines a plan's GA trajectory
-    (workload fingerprints, objective, area, PRNG keys, GA params, slot
-    shape).  Stable across processes — the checkpoint directory name, so
-    a killed drain's restart finds its own saved state."""
+    (workload fingerprints, objective, area, tech constants, PRNG keys,
+    GA params, slot shape).  Stable across processes — the checkpoint
+    directory name, so a killed drain's restart finds its own saved
+    state.  ``tech`` MUST be in the hash: it parameterizes the whole
+    cost model, so two otherwise-identical plans under different
+    ``TechParams`` follow different GA trajectories — omitting it lets a
+    resume silently restore a foreign tech's state (regression-pinned in
+    tests/test_result_cache.py)."""
     h = hashlib.sha256()
     for r in plan.requests:
         h.update(r.ws.fingerprint().encode())
         h.update(repr((
             r.objective, r.obj_weights, float(r.area_constr), r.backend,
-            int(r.pop_size), int(r.generations), int(r.top_k),
+            int(r.pop_size), int(r.generations), int(r.top_k), r.tech,
         )).encode())
         h.update(np.asarray(r.prng_key()).tobytes())
     h.update(repr((int(plan.slots), int(plan.pad_w), int(plan.pad_l))).encode())
@@ -702,17 +707,26 @@ class SearchEngine:
         (atomic ``checkpoint.store``); a re-executed identical plan
         resumes from the newest committed step, and a completed plan
         clears its own directory.
+      * ``result_cache``    — a ``serve.cache.ResultCache`` (or anything
+        with its ``get(req)/put(req, res)`` shape): every completed
+        request persists its finalized ``SearchResult`` keyed on its OWN
+        content (``serve.cache.request_key`` — independent of
+        chunk-mates and slot shape, unlike ``plan_key``), and ``run()``
+        resolves cached requests without planning them — zero GA
+        launches on a full hit.
     """
 
     def __init__(self, *, mesh=None, max_slots: int = 64,
                  segment_gens: Optional[int] = None, segment_retries: int = 1,
-                 checkpoint_dir: Optional[str] = None, checkpoint_every: int = 1):
+                 checkpoint_dir: Optional[str] = None, checkpoint_every: int = 1,
+                 result_cache=None):
         self.mesh = mesh
         self.max_slots = int(max_slots)
         self.segment_gens = None if segment_gens is None else int(segment_gens)
         self.segment_retries = int(segment_retries)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = max(1, int(checkpoint_every))
+        self.result_cache = result_cache
         self._padded_tables: Dict[tuple, tuple] = {}
         # slot-packed device tensors keyed on the packed content
         # (per-slot workload fingerprints + padded shape): a warm drain
@@ -725,12 +739,25 @@ class SearchEngine:
     def run(
         self, requests: Sequence[SearchRequest], *, mesh=None
     ) -> List[SearchResult]:
-        """Plan + execute; results align with ``requests`` order."""
-        plans = plan_batch(requests, max_slots=self.max_slots)
+        """Plan + execute; results align with ``requests`` order.  With a
+        ``result_cache``, cached requests resolve without entering a plan
+        (their chunk-mates pack without them) and completed ones persist
+        their entries — a repeated request list is zero launches."""
         out: List[Optional[SearchResult]] = [None] * len(requests)
+        todo = list(range(len(requests)))
+        if self.result_cache is not None:
+            todo = []
+            for i, r in enumerate(requests):
+                hit = self.result_cache.get(r)
+                if hit is not None:
+                    out[i] = hit
+                else:
+                    todo.append(i)
+        plans = plan_batch([requests[i] for i in todo],
+                           max_slots=self.max_slots)
         for plan in plans:
             for i, res in zip(plan.indices, self.execute(plan, mesh=mesh)):
-                out[i] = res
+                out[todo[i]] = res
         return out  # type: ignore[return-value]
 
     # ----------------------------------------------------------- execution
@@ -754,15 +781,25 @@ class SearchEngine:
             hit = self._padded_tables[key] = tuple(leaves)
         return hit
 
-    def execute(self, plan: BatchPlan, *, mesh=None) -> List[SearchResult]:
+    def execute(self, plan: BatchPlan, *, mesh=None,
+                on_progress: Optional[Callable[[int, SearchResult], None]] = None,
+                ) -> List[SearchResult]:
         """One slot-packed XLA launch (or, with ``segment_gens``, a chain
         of guarded segment launches — same bits); returns results for the
-        plan's REAL requests (pad slots dropped), in plan order."""
+        plan's REAL requests (pad slots dropped), in plan order.
+
+        ``on_progress(i, partial)`` — called after every guarded segment
+        with the plan-local request index and a monotone best-so-far
+        snapshot (``SearchResult`` with ``partial=True``, finalized from
+        the history accumulated so far).  Only the segmented path has
+        mid-search boundaries to report from; the single-shot path never
+        calls it.  Completed requests persist into ``result_cache``."""
         mesh = self.mesh if mesh is None else mesh
         r0 = plan.requests[0]
         k = self.segment_gens
         if k is not None and 0 < k < int(r0.generations):
-            return self._execute_segmented(plan, mesh, k)
+            return self._execute_segmented(plan, mesh, k,
+                                           on_progress=on_progress)
         prep = self._prepare(plan, mesh)
         ga = run_ga_batched(
             prep.k_ga, prep.eval_fn,
@@ -771,13 +808,24 @@ class SearchEngine:
         )
         # one device->host transfer per field, then pure-numpy per-slot prep
         ga_np = GAResult(*(np.asarray(f) for f in ga))
-        return [
+        results = [
             _finalize(
                 GAResult(*(f[i] for f in ga_np)),
                 r.ws.names, _objective_label(r), r.top_k,
             )
             for i, r in enumerate(plan.requests)
         ]
+        self._cache_completed(plan, results)
+        return results
+
+    def _cache_completed(self, plan: BatchPlan,
+                         results: Sequence[SearchResult]) -> None:
+        """Persist each finished request's result under its own content
+        key — per-request, so a future submission hits regardless of
+        which chunk-mates it packed with this time."""
+        if self.result_cache is not None:
+            for r, res in zip(plan.requests, results):
+                self.result_cache.put(r, res)
 
     def _prepare(self, plan: BatchPlan, mesh) -> _LaunchPrep:
         """Pack, place and seed a plan up to (but not including) the GA
@@ -899,12 +947,17 @@ class SearchEngine:
         )
 
     def _execute_segmented(
-        self, plan: BatchPlan, mesh, seg: int
+        self, plan: BatchPlan, mesh, seg: int,
+        on_progress: Optional[Callable[[int, SearchResult], None]] = None,
     ) -> List[SearchResult]:
         """Advance the plan ``seg`` generations per launch with a NaN
         score guard, retry-from-last-good-state, and optional on-disk
         checkpoints.  The chained segments are bit-identical to the
-        single launch (tests/test_ga_segments.py)."""
+        single launch (tests/test_ga_segments.py).  After every good
+        segment, ``on_progress`` (if given) receives each request's
+        best-so-far snapshot — finalized from the same accumulated
+        history the fault/deadline partials use, so the streamed best is
+        monotone non-increasing and exactly the history minimum."""
         from repro.checkpoint import store
 
         reqs = plan.requests
@@ -980,16 +1033,28 @@ class SearchEngine:
                 host_state = GAState(*(np.asarray(f) for f in state))
                 store.save(ck_dir, done,
                            {"state": host_state, "gh": gh, "sh": sh})
+            if on_progress is not None and done < G:
+                # mid-search anytime stream: best-so-far per request,
+                # finalized over the history up to this boundary (the
+                # final segment's snapshot IS the returned result)
+                for i, r in enumerate(reqs):
+                    on_progress(i, _finalize(
+                        self._history_result(gh[i], sh[i]),
+                        r.ws.names, _objective_label(r), r.top_k,
+                        partial=True,
+                    ))
 
         if ck_dir is not None:
             store.clear(ck_dir)
-        return [
+        results = [
             _finalize(
                 self._history_result(gh[i], sh[i]),
                 r.ws.names, _objective_label(r), r.top_k,
             )
             for i, r in enumerate(reqs)
         ]
+        self._cache_completed(plan, results)
+        return results
 
     def _init_populations(self, packed, k_seed, feats, mask, place):
         """Initial populations for every slot: provided ``init_genomes``

@@ -50,6 +50,18 @@ result instead of dropping them:
 
     python -m repro.launch.search --serve 64 --backend table \
         --segment-gens 2 --retry-attempts 3 --partial-results
+
+``--result-cache DIR`` arms the fingerprint-keyed result cache
+(``serve.cache.ResultCache``, disk tier under DIR): a request whose
+``request_key`` was answered before — this process or any earlier one
+over the same DIR — resolves at submit with zero GA launches, bit
+identical to a fresh search.  ``--stream-progress`` prints each
+request's improving best-so-far after every guarded GA segment (implies
+segmented execution; 2-generation segments unless ``--segment-gens`` /
+``--checkpoint-dir`` already chose a boundary):
+
+    python -m repro.launch.search --serve 64 --backend table \
+        --result-cache /tmp/dse-cache --stream-progress
 """
 from __future__ import annotations
 
@@ -90,10 +102,16 @@ def build_workloads(args) -> WorkloadSet:
     return pack_workloads(named)
 
 
-def build_engine(args, mesh):
+def _fmt(v, spec: str = ".2f") -> str:
+    """Format a possibly-``None`` stats percentile (empty window)."""
+    return "n/a" if v is None else f"{v:{spec}}"
+
+
+def build_engine(args, mesh, result_cache=None):
     """A configured ``SearchEngine`` when any robustness knob is set
     (segmented execution, checkpoint/resume), else ``None`` (the drivers
-    fall back to the shared default engine)."""
+    fall back to the shared default engine; under ``--serve`` the
+    service then builds its own engine around ``result_cache``)."""
     if not (args.segment_gens or args.checkpoint_dir):
         return None
     from repro.core.engine import SearchEngine
@@ -105,6 +123,7 @@ def build_engine(args, mesh):
         segment_gens=args.segment_gens or (1 if args.checkpoint_dir else None),
         segment_retries=args.segment_retries,
         checkpoint_dir=args.checkpoint_dir or None,
+        result_cache=result_cache,
     )
 
 
@@ -125,13 +144,34 @@ def serve(args, ws: WorkloadSet, mesh) -> int:
         paper_request_mix,
     )
 
-    engine = build_engine(args, mesh)
+    cache = None
+    if args.result_cache:
+        from repro.serve.cache import ResultCache
+
+        cache = ResultCache(disk_dir=args.result_cache)
+        print(f"[serve] result cache armed ({len(cache.disk_keys())} "
+              f"entries on disk under {args.result_cache})")
+    if args.stream_progress and not (args.segment_gens or args.checkpoint_dir):
+        # streaming needs segment boundaries to emit at; segmented
+        # execution is bit-identical to single-shot, so defaulting one
+        # in changes no result
+        args.segment_gens = 2
+        print("[serve] --stream-progress: defaulting --segment-gens 2")
+    engine = build_engine(args, mesh, result_cache=cache)
+    on_progress = None
+    if args.stream_progress:
+        def on_progress(rid, snap):
+            best = (f"{snap.top_scores[0]:.4g}" if len(snap.top_scores)
+                    else "infeasible")
+            print(f"[serve] rid {rid} partial @gen {snap.generations}: "
+                  f"best-so-far {best}")
     retry = None
     if args.retry_attempts > 1:
         retry = RetryPolicy(max_attempts=args.retry_attempts,
                             backoff_s=args.retry_backoff)
     svc_kw = dict(engine=engine, mesh=mesh, policy=args.serve_policy,
-                  retry=retry, partial_results=args.partial_results)
+                  retry=retry, partial_results=args.partial_results,
+                  result_cache=cache)
     mix_kw = {}
     if args.serve_policy == "priority":
         mix_kw["priorities"] = [3, 0, 1, 2]
@@ -145,7 +185,7 @@ def serve(args, ws: WorkloadSet, mesh) -> int:
     t0 = time.time()
     if args.serve_async:
         with AsyncDSEService(**svc_kw) as svc:
-            futs = svc.submit_all(reqs)
+            futs = [svc.submit(r, on_progress=on_progress) for r in reqs]
             print(f"[serve] {args.serve} heterogeneous requests submitted "
                   f"async (policy={args.serve_policy}, "
                   f"backend={args.backend}, "
@@ -160,10 +200,21 @@ def serve(args, ws: WorkloadSet, mesh) -> int:
         stats = svc.stats
     else:
         svc = DSEService(**svc_kw)
-        svc.submit_all(reqs)
+        rids = [svc.submit(r, on_progress=on_progress) for r in reqs]
         print(f"[serve] {args.serve} heterogeneous requests queued "
               f"(policy={args.serve_policy}, backend={args.backend}, "
               f"slots={svc.engine.max_slots})")
+        # cache hits resolved AT submit — they never reach the queue, so
+        # the stream below won't yield them
+        for rid in rids:
+            res = svc.results.get(rid)
+            if res is not None:
+                results[rid] = res
+                best = (f"{res.top_scores[0]:.4g}" if len(res.top_scores)
+                        else "infeasible")
+                print(f"[serve] rid {rid}: {res.objective} on "
+                      f"{','.join(res.workload_names)} -> best={best} "
+                      f"(cache hit)")
         for rid, res in svc.stream():
             results[rid] = res
             best = (f"{res.top_scores[0]:.4g}" if len(res.top_scores)
@@ -176,12 +227,15 @@ def serve(args, ws: WorkloadSet, mesh) -> int:
     print(f"[serve] drained {len(results)} requests in {dt:.1f}s "
           f"({len(results)/dt:.1f} req/s, {n_evald/dt:.0f} designs/s, "
           f"{stats.launches} launches, wait p50/p99 "
-          f"{stats.wait_p(50):.2f}/{stats.wait_p(99):.2f}s, "
-          f"latency p50/p99 {stats.latency_p(50):.2f}/"
-          f"{stats.latency_p(99):.2f}s, "
+          f"{_fmt(stats.wait_p(50))}/{_fmt(stats.wait_p(99))}s, "
+          f"latency p50/p99 {_fmt(stats.latency_p(50))}/"
+          f"{_fmt(stats.latency_p(99))}s, "
           f"{stats.deadline_misses} deadline misses)")
     print(f"[serve] faults: {stats.failures} failures, {stats.retries} "
           f"retries, {stats.partials} partials, {stats.abandoned} abandoned")
+    if cache is not None:
+        print(f"[serve] cache: {stats.cache_hits} submit hits this drain; "
+              f"{cache.stats.summary()}")
     if args.out:
         payload = [
             {
@@ -273,6 +327,19 @@ def main(argv=None) -> int:
         help="--serve: resolve quarantined / past-deadline requests with "
              "their best-so-far anytime result (partial=True) instead of "
              "dropping them",
+    )
+    ap.add_argument(
+        "--result-cache", default="", metavar="DIR",
+        help="--serve: arm the fingerprint-keyed result cache with a disk "
+             "tier under DIR — a request answered before (this process or "
+             "any earlier one over DIR) resolves at submit with zero GA "
+             "launches, bit-identical to a fresh search",
+    )
+    ap.add_argument(
+        "--stream-progress", action="store_true",
+        help="--serve: print each request's improving best-so-far after "
+             "every guarded GA segment (implies segmented execution; "
+             "defaults --segment-gens 2 if no boundary was chosen)",
     )
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)

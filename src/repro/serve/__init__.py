@@ -2,11 +2,15 @@ from repro.serve.steps import make_decode_step, make_prefill_step  # noqa: F401
 
 
 def __getattr__(name):
-    # lazy: serve.dse pulls in the whole search stack; LM-serving users
-    # (serve.engine / serve.steps) shouldn't pay that import
+    # lazy: serve.dse / serve.cache pull in the whole search stack;
+    # LM-serving users (serve.engine / serve.steps) shouldn't pay that
     if name in ("AsyncDSEService", "DSEService", "RetryPolicy",
                 "ServiceStats", "paper_request_mix"):
         from repro.serve import dse
 
         return getattr(dse, name)
+    if name in ("CacheStats", "ResultCache", "request_key"):
+        from repro.serve import cache
+
+        return getattr(cache, name)
     raise AttributeError(name)

@@ -52,7 +52,16 @@ import threading
 import time
 from collections import deque
 from concurrent.futures import Future
-from typing import Deque, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import (
+    Callable,
+    Deque,
+    Dict,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 import numpy as np
 
@@ -71,9 +80,11 @@ from repro.core.objectives import OBJECTIVES
 from repro.workloads.pack import WorkloadSet
 
 
-def _percentile(samples: Sequence[float], q: float) -> float:
+def _percentile(samples: Sequence[float], q: float) -> Optional[float]:
+    # None, not NaN, on an empty window: NaN is invalid JSON and poisons
+    # any bench row serializing a fresh service's summary()
     if not samples:
-        return float("nan")
+        return None
     return float(np.percentile(np.asarray(samples, np.float64), q))
 
 
@@ -105,7 +116,14 @@ class ServiceStats:
     resolved with an anytime ``partial=True`` result (quarantine or
     deadline sweep — these DO count as completed), and ``abandoned`` the
     requests dropped for good with no result (no retry policy / retries
-    exhausted without partial results)."""
+    exhausted without partial results).
+
+    ``cache_hits`` counts requests resolved AT SUBMIT from the result
+    cache (zero launches; they count as completed with 0 wait/latency).
+
+    Percentiles over empty sample windows are ``None`` (a fresh service
+    has no telemetry) — never NaN, which is invalid JSON and poisons
+    serialized bench rows."""
 
     submitted: int = 0
     completed: int = 0
@@ -116,6 +134,7 @@ class ServiceStats:
     retries: int = 0
     partials: int = 0
     abandoned: int = 0
+    cache_hits: int = 0
     wait_samples: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=SAMPLE_WINDOW))
     latency_samples: Deque[float] = dataclasses.field(
@@ -124,15 +143,17 @@ class ServiceStats:
     def requests_per_s(self) -> float:
         return self.completed / self.busy_s if self.busy_s > 0 else 0.0
 
-    def wait_p(self, q: float) -> float:
-        """Queue-wait percentile in seconds (q in [0, 100])."""
+    def wait_p(self, q: float) -> Optional[float]:
+        """Queue-wait percentile in seconds (q in [0, 100]); ``None``
+        when the sample window is empty."""
         return _percentile(self.wait_samples, q)
 
-    def latency_p(self, q: float) -> float:
-        """End-to-end (submit -> complete) latency percentile in seconds."""
+    def latency_p(self, q: float) -> Optional[float]:
+        """End-to-end (submit -> complete) latency percentile in
+        seconds; ``None`` when the sample window is empty."""
         return _percentile(self.latency_samples, q)
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self) -> Dict[str, Optional[float]]:
         return {
             "requests_per_s": self.requests_per_s(),
             "wait_p50_s": self.wait_p(50), "wait_p99_s": self.wait_p(99),
@@ -143,6 +164,7 @@ class ServiceStats:
             "retries": self.retries,
             "partials": self.partials,
             "abandoned": self.abandoned,
+            "cache_hits": self.cache_hits,
         }
 
 
@@ -209,6 +231,16 @@ class DSEService:
         nothing.
       * ``sleep`` (default ``time.sleep``): how ``drain``/``stream`` wait
         out retry backoff; the sim passes the virtual clock's ``advance``.
+
+    Result caching (``result_cache``, a ``serve.cache.ResultCache``): a
+    submit whose ``request_key`` is cached resolves IMMEDIATELY — the
+    request never queues, never launches, and counts as completed with 0
+    wait/latency (``stats.cache_hits``).  Misses populate the cache at
+    ``_complete`` (full results only; partials never enter), so
+    re-submitting an identical mix drains with zero new GA launches and
+    bit-identical results.  When the engine was built by this service
+    the cache is shared with it; an explicitly passed engine keeps its
+    own ``result_cache`` (and the service adopts it if not given one).
     """
 
     def __init__(
@@ -222,8 +254,14 @@ class DSEService:
         retry: Optional[RetryPolicy] = None,
         partial_results: bool = False,
         sleep=None,
+        result_cache=None,
     ):
-        self.engine = engine or SearchEngine(mesh=mesh, max_slots=max_slots)
+        self.engine = engine or SearchEngine(mesh=mesh, max_slots=max_slots,
+                                             result_cache=result_cache)
+        self.result_cache = (
+            result_cache if result_cache is not None
+            else getattr(self.engine, "result_cache", None)
+        )
         self.policy = get_policy(policy)
         self.clock = clock
         self.retry = retry
@@ -253,14 +291,39 @@ class DSEService:
         # the shrunken residue into a fresh program shape each step
         self._plans_cache: Optional[List[BatchPlan]] = None
         self._snapshot: List[Tuple[int, SearchRequest]] = []
+        # mid-search best-so-far stream subscribers, per rid
+        self._progress_cbs: Dict[int, Callable] = {}
 
     # ------------------------------------------------------------- admission
-    def submit(self, req: SearchRequest) -> int:
+    def submit(self, req: SearchRequest, *, on_progress=None) -> int:
         """Enqueue one request; returns its rid.  Validates the request's
         signature eagerly (bad objectives/backends fail at submit, not
         mid-drain) and pre-builds table-backend cost tables so drains only
-        launch the cached seeding/GA programs."""
+        launch the cached seeding/GA programs.
+
+        A result-cache hit resolves the rid right here: the result is in
+        ``self.results`` before ``submit`` returns, nothing queues, and
+        no launch ever runs for it.
+
+        ``on_progress(rid, partial)`` subscribes to the request's
+        mid-search best-so-far stream: called after every guarded GA
+        segment with a monotone ``partial=True`` snapshot (requires an
+        engine with ``segment_gens``; single-shot engines have no
+        mid-search boundaries and never call it).  Callbacks run on the
+        draining thread, between segment launches."""
         req.signature()
+        if self.result_cache is not None:
+            hit = self.result_cache.get(req)
+            if hit is not None:
+                rid = self._next_rid
+                self._next_rid += 1
+                self.results[rid] = hit
+                self.stats.submitted += 1
+                self.stats.completed += 1
+                self.stats.cache_hits += 1
+                self.stats.wait_samples.append(0.0)
+                self.stats.latency_samples.append(0.0)
+                return rid
         if req.backend == "table":
             req.ws.tables(req.tech)  # fingerprint-memoized ingest prefill
         now = self.clock()
@@ -271,6 +334,8 @@ class DSEService:
         self._deadline_s[rid] = (
             None if req.deadline_s is None else now + float(req.deadline_s)
         )
+        if on_progress is not None:
+            self._progress_cbs[rid] = on_progress
         self.stats.submitted += 1
         self._plans_cache = None  # next step re-packs the grown queue
         return rid
@@ -370,6 +435,7 @@ class DSEService:
             self._deadline_s.pop(rid, None)
             self._attempts.pop(rid, None)
             self._partials.pop(rid, None)
+            self._progress_cbs.pop(rid, None)
         self.stats.abandoned += len(rids)
 
     # -------------------------------------------------- fault tolerance
@@ -399,6 +465,7 @@ class DSEService:
         if dl is not None and now > dl:
             self.stats.deadline_misses += 1
         self._attempts.pop(rid, None)
+        self._progress_cbs.pop(rid, None)
         return rid, res
 
     def _sweep_deadlines(self) -> List[Tuple[int, SearchResult]]:
@@ -462,13 +529,17 @@ class DSEService:
             self._deadline_s.pop(rid, None)
             self._attempts.pop(rid, None)
             self._partials.pop(rid, None)
+            self._progress_cbs.pop(rid, None)
         self.stats.abandoned += len(failed)
         return resolutions, failed
 
     def _complete(
-        self, rids: List[int], results: Sequence[SearchResult], busy_s: float
+        self, rids: List[int], results: Sequence[SearchResult], busy_s: float,
+        reqs: Optional[Sequence[SearchRequest]] = None,
     ) -> List[Tuple[int, SearchResult]]:
-        """Record one finished launch: results, latency/deadline stats."""
+        """Record one finished launch: results, latency/deadline stats,
+        result-cache population (``reqs`` aligns with ``rids``; full
+        results only — ``ResultCache.put`` refuses partials itself)."""
         now = self.clock()
         self.stats.busy_s += busy_s
         self.stats.launches += 1
@@ -476,18 +547,37 @@ class DSEService:
         if len(self.launch_log) > LAUNCH_LOG_WINDOW:
             del self.launch_log[: len(self.launch_log) - LAUNCH_LOG_WINDOW]
         done: List[Tuple[int, SearchResult]] = []
-        for rid, res in zip(rids, results):
+        for i, (rid, res) in enumerate(zip(rids, results)):
             self.results[rid] = res
+            if self.result_cache is not None and reqs is not None:
+                self.result_cache.put(reqs[i], res)
             self.stats.latency_samples.append(now - self._submit_s[rid])
             dl = self._deadline_s.pop(rid, None)
             self._submit_s.pop(rid, None)
             self._attempts.pop(rid, None)
             self._partials.pop(rid, None)
+            self._progress_cbs.pop(rid, None)
             if dl is not None and now > dl:
                 self.stats.deadline_misses += 1
             done.append((rid, res))
         self.stats.completed += len(done)
         return done
+
+    def _progress_kw(self, rids: List[int]) -> Dict[str, Callable]:
+        """The ``on_progress`` kwarg for one launch, mapping the engine's
+        plan-local index to the subscribed rid — or ``{}`` when no rid in
+        the plan subscribed, so engines without the parameter (stubs,
+        fault-injection wrappers) are never handed an unknown kwarg."""
+        cbs = [self._progress_cbs.get(rid) for rid in rids]
+        if not any(cb is not None for cb in cbs):
+            return {}
+
+        def bridge(i: int, snap: SearchResult, _cbs=cbs, _rids=rids):
+            cb = _cbs[i]
+            if cb is not None:
+                cb(_rids[i], snap)
+
+        return {"on_progress": bridge}
 
     def step(self) -> List[Tuple[int, SearchResult]]:
         """Run ONE slot-packed launch (the policy's most urgent plan of
@@ -502,7 +592,7 @@ class DSEService:
             return swept
         plan, rids, t0 = d
         try:
-            results = self.engine.execute(plan)
+            results = self.engine.execute(plan, **self._progress_kw(rids))
         except Exception as e:
             if self.retry is None:
                 self._rollback(plan, rids)  # step() stays retryable
@@ -514,7 +604,8 @@ class DSEService:
             # the kill half of the kill/resume contract
             self._rollback(plan, rids)
             raise
-        return swept + self._complete(rids, results, self.clock() - t0)
+        return swept + self._complete(rids, results, self.clock() - t0,
+                                      plan.requests)
 
     def _wait_for_retries(self) -> None:
         """Nothing dispatchable but retries are backed off: sleep the
@@ -577,10 +668,12 @@ class AsyncDSEService:
         paused: bool = False,
         retry: Optional[RetryPolicy] = None,
         partial_results: bool = False,
+        result_cache=None,
     ):
         self.service = DSEService(
             engine=engine, mesh=mesh, max_slots=max_slots, policy=policy,
             clock=clock, retry=retry, partial_results=partial_results,
+            result_cache=result_cache,
         )
         self._lock = threading.Lock()
         self._wake = threading.Event()
@@ -605,17 +698,28 @@ class AsyncDSEService:
         return self.service.launch_log
 
     # ------------------------------------------------------------- admission
-    def submit(self, req: SearchRequest) -> Future:
+    def submit(self, req: SearchRequest, *, on_progress=None) -> Future:
         """Enqueue; returns a Future resolving to the SearchResult.
-        Never blocks on device work — at most the queue lock."""
+        Never blocks on device work — at most the queue lock.  A
+        result-cache hit comes back as an ALREADY-RESOLVED future (the
+        request never reaches the worker).  ``on_progress(rid, partial)``
+        subscribes to the mid-search best-so-far stream (segmented
+        engines only); callbacks run on the worker thread, between
+        segment launches, and may themselves submit."""
         with self._lock:
             if self._closed:
                 raise RuntimeError("AsyncDSEService is closed")
-            rid = self.service.submit(req)
+            rid = self.service.submit(req, on_progress=on_progress)
             fut: Future = Future()
             fut.rid = rid  # type: ignore[attr-defined]
-            self._futures[rid] = fut
-            self._idle.clear()
+            hit = self.service.results.get(rid)
+            if hit is None:
+                self._futures[rid] = fut
+                self._idle.clear()
+        # a cache hit resolves OUTSIDE the lock (done-callbacks may submit)
+        if hit is not None:
+            fut.set_result(hit)
+            return fut
         self._wake.set()
         return fut
 
@@ -668,9 +772,10 @@ class AsyncDSEService:
                 continue
             plan, rids, t0 = d
             # the launch runs WITHOUT the lock: submits land concurrently
-            # and join the next dispatch's re-plan
+            # and join the next dispatch's re-plan (progress callbacks
+            # fire here too — lock-free, so they may submit)
             try:
-                results = svc.engine.execute(plan)
+                results = svc.engine.execute(plan, **svc._progress_kw(rids))
             except BaseException as e:  # noqa: BLE001 — fail the futures, keep serving
                 with self._lock:
                     if svc.retry is None:
@@ -694,7 +799,8 @@ class AsyncDSEService:
                         f.set_exception(e)
                 continue
             with self._lock:
-                done = svc._complete(rids, results, svc.clock() - t0)
+                done = svc._complete(rids, results, svc.clock() - t0,
+                                     plan.requests)
                 futs = [(self._futures.pop(rid, None), res) for rid, res in done]
             # resolve OUTSIDE the lock: done-callbacks may submit
             for f, res in futs:

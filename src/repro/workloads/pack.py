@@ -14,16 +14,33 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Sequence, Tuple
+import os
+from collections import OrderedDict
+from typing import List, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 # (fingerprint, tech) -> WorkloadTables.  Content-keyed, NOT object-keyed:
 # two separately packed but identical sets share one table build.  Entries
-# are small (a few KB) and the fingerprint space in one process is tiny,
-# so the memo is unbounded by design.
-_TABLES_MEMO: Dict[tuple, object] = {}
+# are small (a few KB), but a production service's request stream can
+# carry UNBOUNDED many distinct fingerprints (joint workload co-search
+# mutates workloads per request), so the memo is a capped LRU: re-access
+# refreshes, overflow evicts oldest, an evicted entry simply rebuilds.
+# Cap via REPRO_TABLES_MEMO_CAP (entries; read per call so tests and
+# operators can retune a live process).
+_TABLES_MEMO: "OrderedDict[tuple, object]" = OrderedDict()
+_TABLES_MEMO_CAP_ENV = "REPRO_TABLES_MEMO_CAP"
+_TABLES_MEMO_CAP_DEFAULT = 1024
+
+
+def _tables_memo_cap() -> int:
+    cap = int(os.environ.get(_TABLES_MEMO_CAP_ENV, _TABLES_MEMO_CAP_DEFAULT))
+    if cap < 1:
+        raise ValueError(
+            f"{_TABLES_MEMO_CAP_ENV} must be >= 1, got {cap}"
+        )
+    return cap
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,8 +81,9 @@ class WorkloadSet:
     def tables(self, tech=None):
         """Per-workload sufficient statistics for the factorized cost model
         (``imc.tables.WorkloadTables``), memoized on ``(fingerprint, tech)``
-        — identical re-packed sets hit the cache.  The import is deferred
-        because ``imc.cost`` imports this module."""
+        in a capped LRU — identical re-packed sets hit the cache, streams
+        of unique fingerprints can't grow host memory without bound.  The
+        import is deferred because ``imc.cost`` imports this module."""
         from repro.imc.tables import build_tables_arrays
         from repro.imc.tech import TECH
 
@@ -74,6 +92,10 @@ class WorkloadSet:
         hit = _TABLES_MEMO.get(key)
         if hit is None:
             hit = _TABLES_MEMO[key] = build_tables_arrays(self.feats, self.mask, tech)
+        _TABLES_MEMO.move_to_end(key)
+        cap = _tables_memo_cap()
+        while len(_TABLES_MEMO) > cap:
+            _TABLES_MEMO.popitem(last=False)
         return hit
 
 

@@ -286,7 +286,15 @@ def test_empty_step_and_stats_defaults():
     svc, clock, stub = sim_service()
     assert svc.step() == []
     assert svc.stats.requests_per_s() == 0.0
-    assert np.isnan(svc.stats.wait_p(50))
+    # empty sample windows report None, not NaN: a fresh service's
+    # summary() must serialize to valid JSON (bench rows read it)
+    assert svc.stats.wait_p(50) is None
+    assert svc.stats.latency_p(99) is None
+    s = svc.stats.summary()
+    assert s["wait_p50_s"] is None and s["latency_p99_s"] is None
+    import json
+
+    assert "NaN" not in json.dumps(s)  # NaN would serialize as bare NaN
 
 
 def test_service_clock_defaults_are_real_time():

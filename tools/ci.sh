@@ -24,6 +24,13 @@
 #                                  # partials on the virtual clock), and
 #                                  # the retry lane recovering injected
 #                                  # chunk faults over the REAL engine
+#   bash tools/ci.sh cache-smoke   # result-cache gate: the request_key /
+#                                  # plan_key / LRU / disk-tier /
+#                                  # streaming test suite, then an
+#                                  # identical paper mix resubmitted
+#                                  # through a cache-armed service (sync
+#                                  # + async) — zero new GA launches,
+#                                  # bit-identical results
 #
 # The scheduler-sim suite (tests/test_scheduler_sim.py) is part of the
 # plain pytest run, so it executes in BOTH the tier-1 (1-device) and
@@ -49,6 +56,9 @@ elif [[ "${1:-}" == "serve-smoke" ]]; then
 elif [[ "${1:-}" == "fault-smoke" ]]; then
   python -m pytest -x -q tests/test_fault_sim.py tests/test_ga_segments.py
   python -m benchmarks.bench_dse_service --fault-smoke
+elif [[ "${1:-}" == "cache-smoke" ]]; then
+  python -m pytest -x -q tests/test_result_cache.py
+  python -m benchmarks.bench_dse_service --cache-smoke
 else
   python -m pytest -x -q
   python -m benchmarks.run --quick
