@@ -58,7 +58,7 @@ def per_workload_scores(
 
 
 def run(seeds: int = 5, verbose: bool = True, mesh=None,
-        backend: str = "jnp") -> dict:
+        backend: str = "jnp", fast: bool = False) -> dict:
     from repro.core.search import batched_search, joint_search_batched
     from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
     from repro.workloads.pack import pack_workloads
@@ -66,17 +66,29 @@ def run(seeds: int = 5, verbose: bool = True, mesh=None,
     ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
     W = ws.n
     largest = "vgg16"
-    results = {"seeds": [], "pop": POP, "gens": GENS, "backend": backend}
+    results = {"seeds": [], "pop": POP, "gens": GENS, "backend": backend,
+               "fast": bool(fast)}
     if mesh is not None:
         from repro.launch.mesh import describe
 
         results["mesh"] = describe(mesh)
 
+    # --fast: the PR-8 fast path (fused generation step + direct table
+    # seeding) for both figure programs.  The fused part is bit-neutral;
+    # direct seeding draws DIFFERENT (equally valid) initial populations,
+    # so the figure's statistics stay comparable but not bit-identical.
+    engine = None
+    if fast:
+        from repro.core.engine import SearchEngine
+
+        engine = SearchEngine(mesh=mesh, max_slots=max(64, seeds * W),
+                              fused=True, direct_seed=True)
+
     t0 = time.time()
     joint_keys = jnp.stack([jax.random.PRNGKey(s) for s in range(seeds)])
     joints = joint_search_batched(
         joint_keys, ws, pop_size=POP, generations=GENS, top_k=TOPK, mesh=mesh,
-        backend=backend,
+        backend=backend, engine=engine,
     )
     t_joint = time.time() - t0
 
@@ -95,6 +107,7 @@ def run(seeds: int = 5, verbose: bool = True, mesh=None,
         top_k=TOPK,
         mesh=mesh,
         backend=backend,
+        engine=engine,
     )
     t_sep = time.time() - t0
     results["joint_wall_s_total"] = t_joint
@@ -169,10 +182,20 @@ def main(argv=None) -> int:
         "--backend", default="jnp", choices=["jnp", "pallas", "table"],
         help="cost-model backend for both figure programs",
     )
+    ap.add_argument(
+        "--fast", action="store_true",
+        help="fused generation step + direct table seeding for both "
+             "programs (use with --backend table; different but equally "
+             "valid seed pools, so statistics — not bits — match)",
+    )
     args = ap.parse_args(argv)
+    if args.fast and args.backend != "table":
+        ap.error("--fast requires --backend table (direct seeding samples "
+                 "the factorized demand tables)")
 
     mesh = prepare_search_mesh(args.mesh) if args.mesh else None
-    out = run(seeds=args.seeds, mesh=mesh, backend=args.backend)
+    out = run(seeds=args.seeds, mesh=mesh, backend=args.backend,
+              fast=args.fast)
 
     with open(exp_dir() / "fig2_joint_vs_separate.json", "w") as f:
         json.dump(out, f, indent=1)

@@ -124,6 +124,97 @@ def run(quick: bool = False, verbose: bool = True, mesh=None,
     return out
 
 
+def run_fused(quick: bool = False, verbose: bool = True,
+              densities=(1, 2, 3)) -> dict:
+    """The fast-path row: fused generation step + direct table seeding on
+    the separate-search config (B single-workload GAs, table backend) —
+    the configuration the >=1M designs/s acceptance number is measured on
+    — swept over grid densities to characterize table memory vs gather
+    cost (``configure_grid``; density d inserts d-1 points per grid
+    interval, so the joint design space grows ~d^9).
+
+    The first density in ``densities`` (the baseline grid) provides the
+    row's top-level ``designs_per_s`` that ``tools/ci.sh bench-smoke``
+    gates against the unfused ``table`` row."""
+    import numpy as np
+
+    from repro.core import space
+    from repro.core.engine import SearchEngine
+    from repro.core.search import batched_search
+    from repro.imc.tables import grid_table_shape, table_bytes
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    W = ws.n
+    seeds = 10 if quick else 40
+    B = seeds * W
+    warm_reps = 2 if quick else 4
+    per_search = POP * (GENS + 1)
+    n = B * per_search
+
+    keys = np.concatenate([
+        np.asarray(jax.random.split(jax.random.PRNGKey(100 + s), W))
+        for s in range(seeds)
+    ])
+    feats = np.tile(np.asarray(ws.feats)[:, None], (seeds, 1, 1, 1))
+    mask = np.tile(np.asarray(ws.mask)[:, None], (seeds, 1, 1))
+    names = [(w,) for w in PAPER_WORKLOADS] * seeds
+
+    out = {
+        "pop": POP, "gens": GENS, "searches": B, "backend": "table",
+        "config": "separate", "fused": True, "direct_seed": True,
+        "warm_reps": warm_reps, "paper_s_per_design": PAPER_S_PER_DESIGN,
+        "densities": [],
+    }
+    base_density = space.GRID_DENSITY
+    try:
+        for d in densities:
+            space.configure_grid(d)
+            eng = SearchEngine(max_slots=B, fused=True, direct_seed=True)
+
+            def go():
+                return batched_search(keys, feats, mask, names=names,
+                                      pop_size=POP, generations=GENS,
+                                      backend="table", engine=eng)
+
+            t0 = time.time()
+            _block(go())
+            cold = time.time() - t0
+            warm = float("inf")
+            for _ in range(warm_reps):
+                t0 = time.time()
+                _block(go())
+                warm = min(warm, time.time() - t0)
+            cells = 1
+            for f in space.FIELDS:
+                cells *= len(space.SPACE[f])
+            row = {
+                "density": int(d),
+                "space_cells": cells,
+                "table_shape": grid_table_shape(),
+                "table_kb_per_workload": table_bytes(ws.tables()) / W / 1024.0,
+                "cold_s": cold,
+                "warm_s": warm,
+                "designs_per_s": n / warm,
+                "speedup_vs_paper": (n / warm) * PAPER_S_PER_DESIGN,
+            }
+            out["densities"].append(row)
+            if verbose:
+                print(f"[search-thru] fused x{B} density={d} "
+                      f"({cells:.3g} cells, "
+                      f"{row['table_kb_per_workload']:.1f} KB/workload): "
+                      f"cold {cold:.2f}s, warm {warm*1e3:.1f}ms -> "
+                      f"{n/warm/1e6:.3f}M designs/s")
+    finally:
+        space.configure_grid(base_density)
+    # the gated steady-state number: the baseline grid's warm throughput
+    out.update({k: out["densities"][0][k]
+                for k in ("cold_s", "warm_s", "designs_per_s",
+                          "speedup_vs_paper")})
+    return out
+
+
 def main(argv=None) -> int:
     import argparse
 
@@ -141,7 +232,26 @@ def main(argv=None) -> int:
         help="cost-model backend; 'table' records its row under 'table' "
              "(the factorized-eval trajectory)",
     )
+    ap.add_argument(
+        "--fused", action="store_true",
+        help="run the fast-path config (fused gen step + direct table "
+             "seeding, separate-search B, table backend) over a grid-"
+             "density sweep and record the row under 'fused'",
+    )
+    ap.add_argument(
+        "--grid-density", default="1,2,3", metavar="D[,D...]",
+        help="comma-separated grid densities for the --fused sweep "
+             "(the first is the baseline the CI gate reads)",
+    )
     args = ap.parse_args(argv)
+
+    if args.fused:
+        if args.mesh or args.backend != "jnp":
+            ap.error("--fused is its own configuration; drop --mesh/--backend")
+        densities = tuple(int(v) for v in args.grid_density.split(","))
+        res = run_fused(quick=args.quick, densities=densities)
+        write_search_throughput(res, row="fused")
+        return 0
 
     # each json row tracks ONE configuration: top-level = dense jnp
     # unsharded, 'sharded' = dense jnp on the mesh, 'table' = table backend

@@ -46,7 +46,7 @@ def prepare_search_mesh(spec: str):
 
 
 # named rows kept alongside the top-level (dense, unsharded) trajectory
-EXTRA_ROWS = ("sharded", "table", "service", "cache")
+EXTRA_ROWS = ("sharded", "table", "service", "cache", "fused")
 
 
 def write_search_throughput(res: dict, *, row: str = None) -> Path:
@@ -104,6 +104,11 @@ def main(argv=None) -> int:
     print("\n== search throughput (factorized table backend) ==")
     sthru_t = bench_search_throughput.run(quick=args.quick, backend="table")
     write_search_throughput(sthru_t, row="table")
+
+    print("\n== search throughput (fused gen step + direct seed, grid sweep) ==")
+    sthru_f = bench_search_throughput.run_fused(
+        quick=args.quick, densities=(1, 2) if args.quick else (1, 2, 3))
+    write_search_throughput(sthru_f, row="fused")
 
     print("\n== DSE service (continuous batching of mixed requests) ==")
     svc = bench_dse_service.run(quick=args.quick)

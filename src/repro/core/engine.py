@@ -164,6 +164,13 @@ def _ctx_eval(
             return obj(r, ctx[-2], ctx[-1])
         return obj(r, ctx[-1]) if objective is None else obj(r)
 
+    if backend == "table" and objective == INDEXED:
+        # advertise the whole-generation Pallas kernel
+        # (repro.kernels.ga_gen_step): the kernel understands exactly this
+        # eval shape — factorized tables + traced (kind, area) tail — and
+        # reads the TechParams it must bake in from this marker.
+        eval_fn.gen_kernel_tech = tech
+
     return eval_fn
 
 
@@ -273,6 +280,108 @@ def _seed_batched_jit(keys, feats, mask, *, pop_size, oversample, max_rounds, te
     return jax.vmap(one)(keys, feats, mask)
 
 
+def _valid_vt_mask(tech: TechParams) -> np.ndarray:
+    """(V, Tc) boolean mask of ``imc.cost.design_valid`` over the
+    (v_op, t_cycle_ns) grid — the only two axes validity depends on.
+    Host numpy mirror of the jnp formula (identical f32 arithmetic)."""
+    v = np.asarray(space.SPACE["v_op"], np.float32)[:, None]
+    t = np.asarray(space.SPACE["t_cycle_ns"], np.float32)[None, :]
+    k = np.float32(
+        (tech.v_nominal - tech.v_th) ** tech.alpha_power / tech.v_nominal
+    )
+    t_min = k * v / (v - np.float32(tech.v_th)) ** np.float32(tech.alpha_power)
+    return t >= t_min
+
+
+# the six jointly-constrained fields of the direct seeder: the demand
+# table's axes first, then the capacity axes — their mixed-radix order
+# defines the 6-D cell index the CDF is over
+_CAP_FIELDS = (
+    "rows", "cols", "bits_cell", "c_per_tile", "t_per_router", "g_per_chip"
+)
+
+
+def _seed_cells_cdf(demand_l: np.ndarray) -> np.ndarray:
+    """Host-side feasible-cell CDF of ONE workload's demand table.
+
+    Feasibility factorizes exactly like the rejection test the direct
+    seeder replaces: ``demand[rows, cols, bits] <= c_per_tile *
+    t_per_router * g_per_chip`` over the 6-D grid (``glb_mb`` and the
+    validity pair are handled separately).  Returns the inclusive int32
+    prefix-sum over the flat (R, C, Bc, Cpt, Tpr, Gpc) cell order —
+    cheap numpy on ~1e4..1e6 cells, computed once per (workload set,
+    tech, grid) and cached; the jitted sampler only searchsorts it."""
+    cpt = np.asarray(space.SPACE["c_per_tile"], np.float32)
+    tpr = np.asarray(space.SPACE["t_per_router"], np.float32)
+    gpc = np.asarray(space.SPACE["g_per_chip"], np.float32)
+    cap = cpt[:, None, None] * tpr[None, :, None] * gpc[None, None, :]
+    feas = demand_l[:, :, :, None, None, None] <= cap[None, None, None]
+    return np.cumsum(feas.reshape(-1).astype(np.int64)).astype(np.int32)
+
+
+def _seed_direct(key, cdf6, pop_size, tech):
+    """Direct inverse-CDF sampler over the feasible cells of the largest
+    workload — the table-backend replacement for the rejection rounds.
+
+    ``cdf6`` is the precomputed joint-cell CDF (``_seed_cells_cdf``); the
+    (v_op, t_cycle) validity mask contributes a second, trace-time CDF,
+    and two uniform selectors pick cells by ``searchsorted``.  Each gene
+    is then placed uniformly INSIDE its cell with a [1e-3, 1-1e-3]
+    margin, so the f32 round-trip ``floor(genome * n)`` in
+    ``space.decode_indices`` can never cross a cell boundary (round-trip
+    error ~1e-6 against a 1e-3 margin).  Every sampled design fits the
+    largest workload and is V/f-valid by construction — the paper's
+    seeding rule with zero rejected draws and no data-dependent
+    while-loop."""
+    sizes = {f: len(space.SPACE[f]) for f in space.FIELDS}
+    total6 = cdf6[-1]
+    vt = _valid_vt_mask(tech)  # (V, Tc), trace-time constant
+    cdf2 = jnp.asarray(np.cumsum(vt.reshape(-1).astype(np.int64)), jnp.int32)
+    total2 = cdf2[-1]
+
+    u = jax.random.uniform(key, (pop_size, space.N_GENES + 2))
+    # clamp the selector below the count: f32 rounding of u*total on very
+    # dense grids (total > 2^24) could otherwise land exactly on total
+    k6 = jnp.minimum((u[:, -2] * total6).astype(jnp.int32), total6 - 1)
+    k2 = jnp.minimum((u[:, -1] * total2).astype(jnp.int32), total2 - 1)
+    sel6 = jnp.searchsorted(cdf6, k6, side="right")
+    sel2 = jnp.searchsorted(cdf2, k2, side="right")
+    idx = {}
+    rem = sel6
+    for f in reversed(_CAP_FIELDS):
+        idx[f] = rem % sizes[f]
+        rem = rem // sizes[f]
+    idx["t_cycle_ns"] = sel2 % sizes["t_cycle_ns"]
+    idx["v_op"] = sel2 // sizes["t_cycle_ns"]
+
+    genes = []
+    for j, f in enumerate(space.FIELDS):
+        frac = jnp.clip(u[:, j], 1e-3, 1.0 - 1e-3)
+        if f == "glb_mb":  # unconstrained axis: any cell
+            genes.append(
+                (jnp.floor(u[:, j] * sizes[f]) + frac) / sizes[f]
+            )
+        else:
+            genes.append((idx[f].astype(jnp.float32) + frac) / sizes[f])
+    pool = jnp.stack(genes, axis=1)
+    # count mirrors the rejection seeder's contract: full unless the
+    # largest workload fits NOWHERE in the space
+    count = jnp.where(total6 > 0, jnp.int32(pop_size), jnp.int32(0))
+    return pool, count
+
+
+@partial(jax.jit, static_argnames=("pop_size", "tech"))
+def _seed_direct_batched_jit(keys, cdf6, *, pop_size, tech):
+    """keys (B, 2), cdf6 (B, n_cells) stacked per-slot feasible-cell CDFs
+    (largest workload each, precomputed host-side and cached) feeding the
+    direct cell sampler."""
+
+    def one(k, cdf):
+        return _seed_direct(k, cdf, pop_size, tech)
+
+    return jax.vmap(one)(keys, cdf6)
+
+
 def seed_population(
     key: jax.Array,
     ws: WorkloadSet,
@@ -351,12 +460,71 @@ def _top_unique(
     and non-finite scores (inf/nan) sort to the end, so dropping them
     equals the old truncate-at-first-non-finite rule."""
     idx = space.decode_indices_np(genomes)
+    # mixed-radix encode to ONE int64 per design: 1-D np.unique is far
+    # cheaper than the row-wise axis=0 variant, and the encoding is
+    # injective (SPACE_SIZE < 2^63 at any realistic grid density), so the
+    # unique classes — and therefore the kept designs — are identical
+    sizes = space.GRID_SIZES.astype(np.int64)
+    strides = np.concatenate(
+        [np.cumprod(sizes[::-1])[::-1][1:], np.ones(1, np.int64)]
+    )
+    codes = idx.astype(np.int64) @ strides
     order = np.argsort(scores, kind="stable")
-    _, first = np.unique(idx[order], axis=0, return_index=True)
+    _, first = np.unique(codes[order], return_index=True)
     first.sort()  # positions within `order`, ascending = best-first
     keep = order[first]
     keep = keep[np.isfinite(scores[keep])][:k]
     return genomes[keep], scores[keep]
+
+
+def _finalize_batch(
+    ga_np: GAResult, requests: Sequence["SearchRequest"],
+) -> List[SearchResult]:
+    """Vectorized ``_finalize`` over the real slots of one launch.
+
+    The per-slot loop was the warm drain's host bottleneck at large B
+    (160 separate argsorts, decodes and unique calls); here the decode,
+    the mixed-radix design codes, the stable score argsort and the
+    convergence scan run ONCE over (S, (G+1)*P) arrays, leaving only the
+    tiny per-slot unique/top-k selection in Python.  Slot-for-slot
+    bit-identical to ``_finalize`` on the same history (same stable
+    argsort, same unique-class first occurrences, same finite filter) —
+    the engine-vs-``run_search`` parity tests cover both paths."""
+    S = len(requests)
+    G1, P, n = ga_np.genomes.shape[1:]
+    flat_g = ga_np.genomes[:S].reshape(S, G1 * P, n)
+    flat_s = ga_np.scores[:S].reshape(S, G1 * P)
+    idx = space.decode_indices_np(
+        flat_g.reshape(-1, n)).reshape(S, G1 * P, n)
+    sizes = space.GRID_SIZES.astype(np.int64)
+    strides = np.concatenate(
+        [np.cumprod(sizes[::-1])[::-1][1:], np.ones(1, np.int64)]
+    )
+    codes = idx.astype(np.int64) @ strides  # (S, G1*P)
+    order = np.argsort(flat_s, axis=1, kind="stable")
+    conv = np.minimum.accumulate(ga_np.scores[:S].min(axis=2), axis=1)
+    finite = np.isfinite(flat_s)
+    out = []
+    for i, r in enumerate(requests):
+        o = order[i]
+        _, first = np.unique(codes[i][o], return_index=True)
+        first.sort()
+        keep = o[first]
+        keep = keep[finite[i][keep]][: r.top_k]
+        top_g, top_s = flat_g[i][keep], flat_s[i][keep]
+        out.append(SearchResult(
+            workload_names=tuple(r.ws.names),
+            objective=_objective_label(r),
+            ga=GAResult(*(f[i] for f in ga_np)),
+            top_designs=space.design_dicts_from_indices(idx[i][keep]),
+            top_scores=top_s,
+            top_genomes=top_g,
+            convergence=conv[i],
+            valid=bool(len(top_s)),
+            partial=False,
+            generations=int(G1) - 1,
+        ))
+    return out
 
 
 def _finalize(
@@ -514,6 +682,9 @@ def plan_key(plan: BatchPlan) -> str:
         )).encode())
         h.update(np.asarray(r.prng_key()).tobytes())
     h.update(repr((int(plan.slots), int(plan.pad_w), int(plan.pad_l))).encode())
+    # the grid is a trace-time constant of every program in the plan: a
+    # densified space follows a different trajectory from the same requests
+    h.update(space.grid_token().encode())
     return h.hexdigest()[:24]
 
 
@@ -719,9 +890,19 @@ class SearchEngine:
     def __init__(self, *, mesh=None, max_slots: int = 64,
                  segment_gens: Optional[int] = None, segment_retries: int = 1,
                  checkpoint_dir: Optional[str] = None, checkpoint_every: int = 1,
-                 result_cache=None):
+                 result_cache=None, fused: Optional[bool] = None,
+                 direct_seed: bool = False):
         self.mesh = mesh
         self.max_slots = int(max_slots)
+        # fused: the GA survival-epilogue knob (None = ga.default_fused();
+        # both settings are bit-identical — see core.ga._make_gen_step)
+        self.fused = fused
+        # direct_seed: table-backend-only inverse-CDF seeding (no rejection
+        # rounds).  Same validity guarantees, DIFFERENT seed pools than the
+        # rejection sampler, so it is opt-in: the default keeps every
+        # backend on the shared rejection program (table-vs-dense
+        # trajectory closeness in tests/test_tables.py depends on that).
+        self.direct_seed = bool(direct_seed)
         self.segment_gens = None if segment_gens is None else int(segment_gens)
         self.segment_retries = int(segment_retries)
         self.checkpoint_dir = checkpoint_dir
@@ -734,6 +915,10 @@ class SearchEngine:
         # skips the host packing and transfer entirely
         self._packed_workloads: Dict[tuple, tuple] = {}
         self._stacked_tables: Dict[tuple, Any] = {}
+        # direct-seeder feasible-cell CDFs: per-request host arrays and the
+        # per-plan device stack (both content-keyed; see _request_seed_cdf)
+        self._seed_cdfs: Dict[tuple, np.ndarray] = {}
+        self._stacked_seed_cdfs: Dict[tuple, Any] = {}
 
     # ------------------------------------------------------------ planning
     def run(
@@ -768,7 +953,7 @@ class SearchEngine:
         padded slots cannot perturb real scores (tests/test_engine.py
         asserts bit-identity).  Keyed on the set's content fingerprint so
         re-packed identical sets reuse the same padded slices."""
-        key = (req.ws.fingerprint(), req.tech, pad_w)
+        key = (req.ws.fingerprint(), req.tech, pad_w, space.grid_token())
         hit = self._padded_tables.get(key)
         if hit is None:
             leaves = [np.asarray(leaf) for leaf in req.ws.tables(req.tech)]
@@ -804,17 +989,11 @@ class SearchEngine:
         ga = run_ga_batched(
             prep.k_ga, prep.eval_fn,
             pop_size=r0.pop_size, generations=r0.generations,
-            init_genomes=prep.init, ctx=prep.ctx,
+            init_genomes=prep.init, ctx=prep.ctx, fused=self.fused,
         )
-        # one device->host transfer per field, then pure-numpy per-slot prep
+        # one device->host transfer per field, then pure-numpy batched prep
         ga_np = GAResult(*(np.asarray(f) for f in ga))
-        results = [
-            _finalize(
-                GAResult(*(f[i] for f in ga_np)),
-                r.ws.names, _objective_label(r), r.top_k,
-            )
-            for i, r in enumerate(plan.requests)
-        ]
+        results = _finalize_batch(ga_np, plan.requests)
         self._cache_completed(plan, results)
         return results
 
@@ -858,7 +1037,10 @@ class SearchEngine:
             self._packed_workloads[(fps, W, L)] = hit
         feats, mask = place(hit[0]), place(hit[1])
 
-        keys = place(jnp.stack([r.prng_key() for r in packed]))
+        # host-side stack (prng keys are tiny numpy/jnp arrays): ONE
+        # device transfer instead of a stack of S device-resident scalars
+        keys = place(jnp.asarray(np.stack([np.asarray(r.prng_key())
+                                           for r in packed])))
         ks = jax.vmap(lambda k: jax.random.split(k))(keys)  # (S, 2, 2)
         # re-commit the derived keys: vmap outputs lose the committed
         # layout, and an uncommitted jit operand lets GSPMD re-layout the
@@ -866,25 +1048,30 @@ class SearchEngine:
         # exact input placements the sharded drivers always used)
         k_seed, k_ga = place(ks[:, 0]), place(ks[:, 1])
 
-        init = self._init_populations(packed, k_seed, feats, mask, place)
-
         # workload ctx: factorized tables (stacked per request — the SAME
-        # arrays run_search would trace, so parity is exact) or raw tensors
+        # arrays run_search would trace, so parity is exact) or raw tensors.
+        # Built BEFORE seeding: the direct table seeder samples straight
+        # from the stacked demand table.
+        tables = None
         if backend == "table":
             from repro.imc.tables import WorkloadTables
 
-            tables = self._stacked_tables.get((fps, W, tech))
+            gt = space.grid_token()
+            tables = self._stacked_tables.get((fps, W, tech, gt))
             if tables is None:
                 per_req = [self._padded_request_tables(r, W) for r in packed]
                 tables = WorkloadTables(*(
                     jnp.asarray(np.stack([t[f] for t in per_req]))
                     for f in range(len(per_req[0]))
                 ))
-                self._stacked_tables[(fps, W, tech)] = tables
+                self._stacked_tables[(fps, W, tech, gt)] = tables
             tables = jax.tree_util.tree_map(place, tables)
             ctx: tuple = (tables,)
         else:
             ctx = (feats, mask)
+
+        init = self._init_populations(packed, k_seed, feats, mask, place,
+                                      tables=tables)
 
         # objective tail: traced exponent weights, or traced (kind, area)
         if r0.obj_weights is not None:
@@ -1005,6 +1192,7 @@ class SearchEngine:
                     new_state, (hg, hs) = run_ga_batched_segment(
                         state, prep.eval_fn, ctx=prep.ctx,
                         generations=k_gens, total_generations=G,
+                        fused=self.fused,
                     )
                     hs_np = np.asarray(hs)  # (S, k, P)
                     if np.isnan(hs_np).any():
@@ -1056,22 +1244,62 @@ class SearchEngine:
         self._cache_completed(plan, results)
         return results
 
-    def _init_populations(self, packed, k_seed, feats, mask, place):
+    def _request_seed_cdf(self, req: SearchRequest) -> np.ndarray:
+        """One request's feasible-cell CDF for the direct seeder (host
+        numpy, largest workload — the same crossbar-demand ``argmax`` rule
+        as ``largest_workload_index``, mirrored in numpy).  Content-keyed
+        like the padded tables: the 12ms-class 6-D mask + prefix-sum runs
+        once per (workload set, tech, grid) and never on the warm path."""
+        key = (req.ws.fingerprint(), req.tech, space.grid_token())
+        hit = self._seed_cdfs.get(key)
+        if hit is None:
+            feats = np.asarray(req.ws.feats, np.float32)
+            mask = np.asarray(req.ws.mask, bool)
+            w = (feats[..., 1] * feats[..., 2] * feats[..., 5] * mask).sum(-1)
+            demand = np.asarray(req.ws.tables(req.tech).demand)
+            hit = self._seed_cdfs[key] = _seed_cells_cdf(
+                demand[int(np.argmax(w))]
+            )
+        return hit
+
+    def _stacked_seed_cdf(self, packed, tech):
+        """(S, n_cells) device stack of the per-slot seed CDFs, cached on
+        the packed fingerprints — a warm drain reuses the device array."""
+        fps = tuple(r.ws.fingerprint() for r in packed)
+        key = (fps, tech, space.grid_token())
+        hit = self._stacked_seed_cdfs.get(key)
+        if hit is None:
+            hit = jnp.asarray(
+                np.stack([self._request_seed_cdf(r) for r in packed])
+            )
+            self._stacked_seed_cdfs[key] = hit
+        return hit
+
+    def _init_populations(self, packed, k_seed, feats, mask, place,
+                          tables=None):
         """Initial populations for every slot: provided ``init_genomes``
         are copied in (the GA donates its input; callers keep theirs),
         missing ones run the batched largest-workload rejection seeder —
         one program either way, and seed failures only raise for slots
-        that actually needed seeding."""
+        that actually needed seeding.  With ``direct_seed`` and stacked
+        tables at hand, the rejection rounds are replaced by the direct
+        feasible-cell sampler (``_seed_direct``)."""
         r0 = packed[0]
         P = int(r0.pop_size)
         needs = [r.init_genomes is None for r in packed]
         if not any(needs):
             init = jnp.stack([jnp.asarray(r.init_genomes) for r in packed])
             return place(init, pop_dim=1)
-        pools, counts = _seed_batched_jit(
-            k_seed, feats, mask,
-            pop_size=P, oversample=64, max_rounds=8, tech=r0.tech,
-        )
+        if self.direct_seed and tables is not None:
+            cdf6 = place(self._stacked_seed_cdf(packed, r0.tech))
+            pools, counts = _seed_direct_batched_jit(
+                k_seed, cdf6, pop_size=P, tech=r0.tech,
+            )
+        else:
+            pools, counts = _seed_batched_jit(
+                k_seed, feats, mask,
+                pop_size=P, oversample=64, max_rounds=8, tech=r0.tech,
+            )
         counts = np.asarray(counts)
         for i, (r, need) in enumerate(zip(packed, needs)):
             if need and counts[i] < P:

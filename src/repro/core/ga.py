@@ -38,6 +38,7 @@ tests/test_ga_segments.py and as a hypothesis property.
 """
 from __future__ import annotations
 
+import os
 import warnings
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional, Tuple
@@ -50,6 +51,34 @@ from repro.core import space
 SBX_PROB = 0.95
 SBX_ETA = 3.0
 MUT_ETA = 3.0
+
+
+def _env_flag(name: str, default: bool) -> bool:
+    v = os.environ.get(name)
+    if v is None:
+        return default
+    return v.strip().lower() not in ("", "0", "false", "off", "no")
+
+
+def default_fused() -> bool:
+    """Default for the ``fused`` GA knob: collapse the survival epilogue
+    (total-order keying + argsort + score gather) into ONE combined
+    ``lax.sort`` pass per generation.  On by default; set
+    ``REPRO_GA_FUSED=0`` to fall back to the two-pass epilogue.  Both
+    paths are bit-identical (the combined sort carries the scores through
+    the exact permutation ``_survivor_indices`` computes) — the flag only
+    trades program shape, never trajectories."""
+    return _env_flag("REPRO_GA_FUSED", True)
+
+
+def gen_kernel_enabled() -> bool:
+    """Opt-in for the Pallas whole-generation kernel
+    (``repro.kernels.ga_gen_step``).  Read at TRACE time: set
+    ``REPRO_GA_KERNEL=1`` before the first GA launch of the process (a
+    cached jit compiled with the flag off will not retrace).  Off by
+    default — the lax fused path is faster on CPU hosts; the kernel
+    targets TPU runs and is parity-pinned in interpret mode."""
+    return _env_flag("REPRO_GA_KERNEL", False)
 
 
 class GAResult(NamedTuple):
@@ -134,14 +163,31 @@ def _tournament(key, scores: jnp.ndarray, n: int) -> jnp.ndarray:
     return jnp.where(scores[a] <= scores[b], a, b)
 
 
+def _pow_recip_eta1(x: jnp.ndarray, eta: float) -> jnp.ndarray:
+    """``x ** (1 / (eta + 1))``.  The paper's eta = 3 turns the
+    transcendental pow — the measured hot spot of SBX/mutation on CPU —
+    into two sqrts (exponent 1/4)."""
+    if eta == 3.0:
+        return jnp.sqrt(jnp.sqrt(x))
+    return x ** (1.0 / (eta + 1.0))
+
+
+def _pow_eta1(x: jnp.ndarray, eta: float) -> jnp.ndarray:
+    """``x ** (eta + 1)``; eta = 3 strength-reduces to two multiplies."""
+    if eta == 3.0:
+        x2 = x * x
+        return x2 * x2
+    return x ** (eta + 1.0)
+
+
 def _sbx(key, p1: jnp.ndarray, p2: jnp.ndarray, eta: float, prob: float):
     """Simulated binary crossover on [0,1] genes (Deb & Agrawal)."""
     ku, kc, kg = jax.random.split(key, 3)
     u = jax.random.uniform(ku, p1.shape)
     beta = jnp.where(
         u <= 0.5,
-        (2.0 * u) ** (1.0 / (eta + 1.0)),
-        (1.0 / (2.0 * (1.0 - u))) ** (1.0 / (eta + 1.0)),
+        _pow_recip_eta1(2.0 * u, eta),
+        _pow_recip_eta1(1.0 / (2.0 * (1.0 - u)), eta),
     )
     c1 = 0.5 * ((1 + beta) * p1 + (1 - beta) * p2)
     c2 = 0.5 * ((1 - beta) * p1 + (1 + beta) * p2)
@@ -160,38 +206,112 @@ def _poly_mutation(key, x: jnp.ndarray, eta: float, prob: float):
     u = jax.random.uniform(ku, x.shape)
     lo = x  # delta to bounds (range = 1)
     hi = 1.0 - x
-    d1 = (2 * u + (1 - 2 * u) * (1 - lo) ** (eta + 1)) ** (1 / (eta + 1)) - 1
-    d2 = 1 - (2 * (1 - u) + (2 * u - 1) * (1 - hi) ** (eta + 1)) ** (1 / (eta + 1))
+    d1 = _pow_recip_eta1(2 * u + (1 - 2 * u) * _pow_eta1(1 - lo, eta), eta) - 1
+    d2 = 1 - _pow_recip_eta1(2 * (1 - u) + (2 * u - 1) * _pow_eta1(1 - hi, eta), eta)
     delta = jnp.where(u <= 0.5, d1, d2)
     do = jax.random.uniform(kp, x.shape) < prob
     return jnp.clip(jnp.where(do, x + delta, x), 0.0, 1.0 - 1e-7)
 
 
-def _make_gen_step(eval_fn, ctx, pop_size, n_genes, sbx_prob, sbx_eta, mut_eta):
+def _make_gen_step(eval_fn, ctx, pop_size, n_genes, sbx_prob, sbx_eta, mut_eta,
+                   fused=True):
     """The per-generation scan body, shared verbatim by the single-shot
     ``_ga_core`` and the segmented ``_segment_core`` so both paths compile
-    the exact same generation program (the bit-parity guarantee)."""
+    the exact same generation program (the bit-parity guarantee).
+
+    All per-generation randomness comes from ONE uniform block sliced at
+    static offsets — the many small threefry launches of the original
+    select/SBX/mutate splits carried fixed dispatch overheads that
+    dominated the generation on CPU.  ``fused`` only switches the survival
+    epilogue: ``True`` sorts ``(okey, iota, scores)`` in one combined
+    ``lax.sort`` pass (the scores ride the key permutation, saving the
+    separate score gather and its HBM round-trip); ``False`` keeps the
+    two-pass ``_survivor_indices`` + gather.  The sort keys are a unique
+    total order, so both epilogues apply the identical permutation —
+    fused vs unfused is pinned bit-identical in tests/test_fused_gen.py.
+
+    When ``REPRO_GA_KERNEL`` is set and the eval fn advertises table-gather
+    support (``gen_kernel_tech``), the whole generation instead lowers to
+    the Pallas kernel in ``repro.kernels.ga_gen_step`` (same bits, one
+    kernel launch per generation)."""
     P = pop_size
-    mut_prob = 1.0 / n_genes
+    n = n_genes
+    mut_prob = 1.0 / n
     # odd P: select one extra pair and truncate the children back to P, so
     # no parent slot is silently dropped and history shapes stay (G+1, P).
     n_pairs = (P + 1) // 2
+    n_contest = 2 * n_pairs
+    # slice offsets into the single per-generation uniform block
+    o_t = 2 * n_contest          # tournament contestants (uniform -> int)
+    o_u = o_t + n_pairs * n      # SBX spread factor u
+    o_p = o_u + n_pairs          # SBX per-pair gate
+    o_g = o_p + n_pairs * n      # SBX per-gene gate
+    o_mu = o_g + P * n           # mutation u
+    o_md = o_mu + P * n          # mutation per-gene gate
+    tot = o_md
+
+    if fused and gen_kernel_enabled() \
+            and getattr(eval_fn, "gen_kernel_tech", None) is not None:
+        from repro.kernels.ga_gen_step import make_kernel_gen_step
+
+        kgen = make_kernel_gen_step(
+            eval_fn, ctx, pop_size=P, n_genes=n,
+            sbx_prob=sbx_prob, sbx_eta=sbx_eta, mut_eta=mut_eta,
+        )
+        if kgen is not None:
+            return kgen
 
     def gen(carry, k):
         pop, scores = carry
-        k_sel, k_sbx, k_mut = jax.random.split(k, 3)
-        parents = _tournament(k_sel, scores, 2 * n_pairs)
+        u = jax.random.uniform(k, (tot,))
+        # binary tournament: 2*n_pairs contests of 2 contestants each
+        ti = (u[:o_t] * P).astype(jnp.int32)
+        ca, cb = ti[:n_contest], ti[n_contest:]
+        parents = jnp.where(scores[ca] <= scores[cb], ca, cb)
         p1 = pop[parents[:n_pairs]]
         p2 = pop[parents[n_pairs:]]
-        c1, c2 = _sbx(k_sbx, p1, p2, sbx_eta, sbx_prob)
+        # SBX from the pre-drawn uniforms
+        ub = u[o_t:o_u].reshape(n_pairs, n)
+        beta = jnp.where(
+            ub <= 0.5,
+            _pow_recip_eta1(2.0 * ub, sbx_eta),
+            _pow_recip_eta1(1.0 / (2.0 * (1.0 - ub)), sbx_eta),
+        )
+        c1 = 0.5 * ((1 + beta) * p1 + (1 - beta) * p2)
+        c2 = 0.5 * ((1 - beta) * p1 + (1 + beta) * p2)
+        do_pair = u[o_u:o_p].reshape(n_pairs, 1) < sbx_prob
+        do_gene = u[o_p:o_g].reshape(n_pairs, n) < 0.5
+        use = do_pair & do_gene
+        c1 = jnp.clip(jnp.where(use, c1, p1), 0.0, 1.0 - 1e-7)
+        c2 = jnp.clip(jnp.where(use, c2, p2), 0.0, 1.0 - 1e-7)
         children = jnp.concatenate([c1, c2], axis=0)[:P]
-        children = _poly_mutation(k_mut, children, mut_eta, mut_prob)
+        # polynomial mutation
+        um = u[o_g:o_mu].reshape(P, n)
+        lo = children  # delta to bounds (range = 1)
+        hi = 1.0 - children
+        d1 = _pow_recip_eta1(
+            2 * um + (1 - 2 * um) * _pow_eta1(1 - lo, mut_eta), mut_eta) - 1
+        d2 = 1 - _pow_recip_eta1(
+            2 * (1 - um) + (2 * um - 1) * _pow_eta1(1 - hi, mut_eta), mut_eta)
+        delta = jnp.where(um <= 0.5, d1, d2)
+        do = u[o_mu:o_md].reshape(P, n) < mut_prob
+        children = jnp.clip(
+            jnp.where(do, children + delta, children), 0.0, 1.0 - 1e-7)
         child_scores = eval_fn(children, ctx)
         # (mu + lambda) elitist survival
         allg = jnp.concatenate([pop, children], axis=0)
         alls = jnp.concatenate([scores, child_scores], axis=0)
-        order = _survivor_indices(alls, P)
-        new_pop, new_scores = allg[order], alls[order]
+        if fused:
+            bits = jax.lax.bitcast_convert_type(
+                alls.astype(jnp.float32), jnp.int32)
+            okey = jnp.where(bits < 0, -(bits & jnp.int32(0x7FFFFFFF)), bits)
+            iota = jax.lax.iota(jnp.int32, 2 * P)
+            _, idx, srt = jax.lax.sort(
+                (okey, iota, alls), num_keys=2, is_stable=False)
+            new_pop, new_scores = allg[idx[:P]], srt[:P]
+        else:
+            order = _survivor_indices(alls, P)
+            new_pop, new_scores = allg[order], alls[order]
         return (new_pop, new_scores), (children, child_scores)
 
     return gen
@@ -199,11 +319,12 @@ def _make_gen_step(eval_fn, ctx, pop_size, n_genes, sbx_prob, sbx_eta, mut_eta):
 
 def _ga_core(
     key, eval_fn, pop_size, generations, init_genomes, ctx,
-    sbx_prob, sbx_eta, mut_eta,
+    sbx_prob, sbx_eta, mut_eta, fused,
 ) -> GAResult:
     n = init_genomes.shape[-1]
     s0 = eval_fn(init_genomes, ctx)
-    gen = _make_gen_step(eval_fn, ctx, pop_size, n, sbx_prob, sbx_eta, mut_eta)
+    gen = _make_gen_step(eval_fn, ctx, pop_size, n, sbx_prob, sbx_eta, mut_eta,
+                         fused=fused)
     keys = jax.random.split(key, generations)
     (pop, scores), (hist_g, hist_s) = jax.lax.scan(gen, (init_genomes, s0), keys)
 
@@ -221,6 +342,7 @@ def _ga_core(
 
 def _segment_core(
     state, eval_fn, ctx, seg_gens, total_gens, sbx_prob, sbx_eta, mut_eta,
+    fused,
 ) -> Tuple[GAState, Tuple[jnp.ndarray, jnp.ndarray]]:
     """Advance ``seg_gens`` generations from ``state``.
 
@@ -233,7 +355,8 @@ def _segment_core(
     """
     pop, scores = state.genomes, state.scores
     P, n = pop.shape[-2], pop.shape[-1]
-    gen = _make_gen_step(eval_fn, ctx, P, n, sbx_prob, sbx_eta, mut_eta)
+    gen = _make_gen_step(eval_fn, ctx, P, n, sbx_prob, sbx_eta, mut_eta,
+                         fused=fused)
     all_keys = jax.random.split(state.key, total_gens)
     keys = jax.lax.dynamic_slice_in_dim(all_keys, state.gen, seg_gens)
     (pop, scores), hist = jax.lax.scan(gen, (pop, scores), keys)
@@ -244,23 +367,25 @@ def _segment_core(
     return new_state, hist
 
 
-_GA_STATICS = ("eval_fn", "pop_size", "generations", "sbx_prob", "sbx_eta", "mut_eta")
-_SEG_STATICS = ("eval_fn", "seg_gens", "total_gens", "sbx_prob", "sbx_eta", "mut_eta")
+_GA_STATICS = ("eval_fn", "pop_size", "generations", "sbx_prob", "sbx_eta",
+               "mut_eta", "fused")
+_SEG_STATICS = ("eval_fn", "seg_gens", "total_gens", "sbx_prob", "sbx_eta",
+                "mut_eta", "fused")
 
 
 @partial(jax.jit, static_argnames=_GA_STATICS, donate_argnames=("init_genomes",))
 def _run_ga_jit(key, init_genomes, ctx, *, eval_fn, pop_size, generations,
-                sbx_prob, sbx_eta, mut_eta):
+                sbx_prob, sbx_eta, mut_eta, fused):
     return _ga_core(key, eval_fn, pop_size, generations, init_genomes, ctx,
-                    sbx_prob, sbx_eta, mut_eta)
+                    sbx_prob, sbx_eta, mut_eta, fused)
 
 
 @partial(jax.jit, static_argnames=_GA_STATICS, donate_argnames=("init_genomes",))
 def _run_ga_batched_jit(keys, init_genomes, ctx, *, eval_fn, pop_size,
-                        generations, sbx_prob, sbx_eta, mut_eta):
+                        generations, sbx_prob, sbx_eta, mut_eta, fused):
     def one(key, init, c):
         return _ga_core(key, eval_fn, pop_size, generations, init, c,
-                        sbx_prob, sbx_eta, mut_eta)
+                        sbx_prob, sbx_eta, mut_eta, fused)
 
     ctx_axes = jax.tree_util.tree_map(lambda _: 0, ctx)
     return jax.vmap(one, in_axes=(0, 0, ctx_axes))(keys, init_genomes, ctx)
@@ -286,17 +411,17 @@ def _init_state_batched_jit(keys, init_genomes, ctx, *, eval_fn):
 
 @partial(jax.jit, static_argnames=_SEG_STATICS)
 def _run_ga_segment_jit(state, ctx, *, eval_fn, seg_gens, total_gens,
-                        sbx_prob, sbx_eta, mut_eta):
+                        sbx_prob, sbx_eta, mut_eta, fused):
     return _segment_core(state, eval_fn, ctx, seg_gens, total_gens,
-                         sbx_prob, sbx_eta, mut_eta)
+                         sbx_prob, sbx_eta, mut_eta, fused)
 
 
 @partial(jax.jit, static_argnames=_SEG_STATICS)
 def _run_ga_batched_segment_jit(state, ctx, *, eval_fn, seg_gens, total_gens,
-                                sbx_prob, sbx_eta, mut_eta):
+                                sbx_prob, sbx_eta, mut_eta, fused):
     def one(st, c):
         return _segment_core(st, eval_fn, c, seg_gens, total_gens,
-                             sbx_prob, sbx_eta, mut_eta)
+                             sbx_prob, sbx_eta, mut_eta, fused)
 
     ctx_axes = jax.tree_util.tree_map(lambda _: 0, ctx)
     return jax.vmap(one, in_axes=(0, ctx_axes))(state, ctx)
@@ -313,8 +438,12 @@ def run_ga(
     sbx_prob: float = SBX_PROB,
     sbx_eta: float = SBX_ETA,
     mut_eta: float = MUT_ETA,
+    fused: Optional[bool] = None,
 ) -> GAResult:
     """Run the GA as one cached jit.  Lower score = better.
+
+    ``fused`` selects the combined-sort survival epilogue (bit-identical
+    to the unfused one); ``None`` means ``default_fused()``.
 
     ``eval_fn(genomes (P, n)) -> scores (P,)`` when ``ctx`` is ``None``, or
     ``eval_fn(genomes, ctx) -> scores`` with ``ctx`` an arbitrary pytree of
@@ -337,6 +466,7 @@ def run_ga(
             key, init_genomes, ctx,
             eval_fn=eval_fn, pop_size=int(pop_size), generations=int(generations),
             sbx_prob=float(sbx_prob), sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
+            fused=bool(default_fused() if fused is None else fused),
         )
 
 
@@ -351,6 +481,7 @@ def run_ga_batched(
     sbx_prob: float = SBX_PROB,
     sbx_eta: float = SBX_ETA,
     mut_eta: float = MUT_ETA,
+    fused: Optional[bool] = None,
 ) -> GAResult:
     """B independent GAs in one vmapped XLA program.
 
@@ -371,6 +502,7 @@ def run_ga_batched(
             keys, init_genomes, ctx,
             eval_fn=eval_fn, pop_size=int(pop_size), generations=int(generations),
             sbx_prob=float(sbx_prob), sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
+            fused=bool(default_fused() if fused is None else fused),
         )
 
 
@@ -409,6 +541,7 @@ def run_ga_segment(
     sbx_prob: float = SBX_PROB,
     sbx_eta: float = SBX_ETA,
     mut_eta: float = MUT_ETA,
+    fused: Optional[bool] = None,
 ) -> Tuple[GAState, Tuple[jnp.ndarray, jnp.ndarray]]:
     """Advance ``generations`` (k) generations through ONE cached jit,
     returning ``(new_state, (children (k, P, n), child_scores (k, P)))``.
@@ -426,6 +559,7 @@ def run_ga_segment(
         state, ctx, eval_fn=eval_fn,
         seg_gens=int(generations), total_gens=int(total_generations),
         sbx_prob=float(sbx_prob), sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
+        fused=bool(default_fused() if fused is None else fused),
     )
 
 
@@ -439,6 +573,7 @@ def run_ga_batched_segment(
     sbx_prob: float = SBX_PROB,
     sbx_eta: float = SBX_ETA,
     mut_eta: float = MUT_ETA,
+    fused: Optional[bool] = None,
 ) -> Tuple[GAState, Tuple[jnp.ndarray, jnp.ndarray]]:
     """Batched ``run_ga_segment``: state fields and ctx leaves carry a
     leading (B,) axis; histories come back as (B, k, P, n) / (B, k, P).
@@ -450,4 +585,5 @@ def run_ga_batched_segment(
         state, ctx, eval_fn=eval_fn,
         seg_gens=int(generations), total_gens=int(total_generations),
         sbx_prob=float(sbx_prob), sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
+        fused=bool(default_fused() if fused is None else fused),
     )

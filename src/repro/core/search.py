@@ -87,6 +87,21 @@ from repro.imc.tech import TECH, TechParams
 from repro.workloads.pack import WorkloadSet
 
 
+def _resolve_engine(engine, fused):
+    """The engine a driver call runs on: an explicit ``engine`` wins (its
+    own ``fused`` setting governs), otherwise the shared default — or,
+    when the caller pins ``fused``, a per-call engine carrying the flag
+    (engines are stateless apart from content caches, so this costs one
+    object, not a retrace: the jit caches are global)."""
+    if engine is not None:
+        return engine
+    if fused is None:
+        return default_engine()
+    from repro.core.engine import SearchEngine
+
+    return SearchEngine(fused=fused)
+
+
 # ----------------------------------------------------------------- drivers
 def run_search(
     key: jax.Array,
@@ -101,17 +116,20 @@ def run_search(
     tech: TechParams = TECH,
     backend: str = "jnp",
     engine=None,
+    fused: Optional[bool] = None,
 ) -> SearchResult:
     """One joint search = a single-request engine plan.  ``engine``
     substitutes a configured ``SearchEngine`` (e.g. segmented execution
-    with checkpoints) for the shared default."""
+    with checkpoints) for the shared default.  ``fused`` pins the GA
+    survival-epilogue mode (None = the process default; both settings are
+    bit-identical — it only changes the compiled program shape)."""
     req = SearchRequest(
         ws=ws, objective=objective, area_constr=float(area_constr),
         key=key, backend=backend, pop_size=int(pop_size),
         generations=int(generations), top_k=int(top_k), tech=tech,
         init_genomes=init_genomes,
     )
-    return (engine or default_engine()).run([req])[0]
+    return _resolve_engine(engine, fused).run([req])[0]
 
 
 def joint_search(key, ws: WorkloadSet, **kw) -> SearchResult:
@@ -135,6 +153,7 @@ def batched_search(
     backend: str = "jnp",
     mesh=None,
     engine=None,
+    fused: Optional[bool] = None,
 ) -> List[SearchResult]:
     """B independent searches through the engine (one plan when shapes
     agree, chunked at the engine's slot limit for very large B).
@@ -189,7 +208,7 @@ def batched_search(
         )
         for b in range(B)
     ]
-    return (engine or default_engine()).run(reqs, mesh=mesh)
+    return _resolve_engine(engine, fused).run(reqs, mesh=mesh)
 
 
 def joint_search_batched(keys: jnp.ndarray, ws: WorkloadSet, **kw) -> List[SearchResult]:

@@ -6,9 +6,23 @@ continuous relaxation: 9 genes in [0, 1), decoded per-gene to a grid index
 
 Grid sizes multiply to 5*5*5*4*6 * 20 * 4 * 8 * 10 = 19,200,000 ~ 1.9e7,
 matching the paper's stated search-space size.
+
+Densified grids: ``configure_grid(density)`` refines every axis except
+``bits_cell`` by inserting ``density - 1`` interpolated points per
+interval (geometric for the power-of-two-ish hardware counts and
+timing/buffer axes, linear for ``v_op``), keeping every original grid
+point as an exact subset.  ``density=2`` grows the space ~130x (2.5e9
+designs), ``density=3`` ~2600x.  The whole factorized-table stack reads
+``SPACE`` at trace time, so the densified grids flow through table
+builds, decoding, and the search engine automatically — every content
+cache keyed by workload fingerprint also keys on ``grid_token()``.  The
+default density is 1 (the paper's grid), overridable with the
+``REPRO_GRID_DENSITY`` env var at import.
 """
 from __future__ import annotations
 
+import hashlib
+import os
 from typing import Dict, List, Tuple
 
 import jax
@@ -17,8 +31,8 @@ import numpy as np
 
 from repro.imc.cost import DesignArrays
 
-# name -> grid of values (ordered)
-SPACE: Dict[str, np.ndarray] = {
+# name -> grid of values (ordered); the paper's density-1 grid
+_BASE_SPACE: Dict[str, np.ndarray] = {
     "rows": np.array([32, 64, 128, 256, 512], np.float32),
     "cols": np.array([32, 64, 128, 256, 512], np.float32),
     "c_per_tile": np.array([2, 4, 8, 16, 32], np.float32),
@@ -32,13 +46,97 @@ SPACE: Dict[str, np.ndarray] = {
     ),
 }
 
+# how each axis refines: geometric midpoints rounded to integers for the
+# hardware counts, geometric for timings/buffers, linear for voltage;
+# bits_cell stays exact (fractional cell bits are not physical)
+_REFINE_KIND: Dict[str, str] = {
+    "rows": "geom_int",
+    "cols": "geom_int",
+    "c_per_tile": "geom_int",
+    "t_per_router": "geom_int",
+    "g_per_chip": "geom_int",
+    "v_op": "linear",
+    "bits_cell": "exact",
+    "t_cycle_ns": "geom",
+    "glb_mb": "geom",
+}
+
 FIELDS: Tuple[str, ...] = tuple(DesignArrays._fields)
-assert set(SPACE) == set(FIELDS), (set(SPACE), set(FIELDS))
+assert set(_BASE_SPACE) == set(FIELDS), (set(_BASE_SPACE), set(FIELDS))
 N_GENES = len(FIELDS)
+
+
+def _refine_axis(vals: np.ndarray, density: int, kind: str) -> np.ndarray:
+    if density <= 1 or kind == "exact":
+        return vals.copy()
+    out = []
+    for a, b in zip(vals[:-1], vals[1:]):
+        out.append(float(a))
+        for j in range(1, density):
+            t = j / density
+            if kind == "linear":
+                m = round(a + (b - a) * t, 4)
+            else:
+                m = a * (b / a) ** t
+                if kind == "geom_int":
+                    m = round(m)
+            out.append(float(m))
+    out.append(float(vals[-1]))
+    # sorted unique: integer rounding of close midpoints may collide
+    return np.unique(np.array(out, np.float32))
+
+
+def _build_space(density: int) -> Dict[str, np.ndarray]:
+    return {
+        f: _refine_axis(_BASE_SPACE[f], density, _REFINE_KIND[f])
+        for f in FIELDS
+    }
+
+
+GRID_DENSITY = max(1, int(os.environ.get("REPRO_GRID_DENSITY", "1")))
+SPACE: Dict[str, np.ndarray] = _build_space(GRID_DENSITY)
 GRID_SIZES = np.array([len(SPACE[f]) for f in FIELDS], np.int32)
 SPACE_SIZE = int(np.prod(GRID_SIZES.astype(np.int64)))
-
 _GRIDS = [jnp.asarray(SPACE[f]) for f in FIELDS]
+_GRID_TOKEN = ""
+
+
+def _compute_token() -> str:
+    h = hashlib.sha256()
+    for f in FIELDS:
+        h.update(np.asarray(SPACE[f], np.float32).tobytes())
+    return h.hexdigest()[:16]
+
+
+_GRID_TOKEN = _compute_token()
+
+
+def grid_token() -> str:
+    """Content hash of the active grid — every cache keyed by workload
+    fingerprint (table memos, padded/stacked engine tables, plan and
+    result-cache keys) also keys on this, so reconfiguring the grid can
+    never serve a stale table or cached result."""
+    return _GRID_TOKEN
+
+
+def configure_grid(density: int = 1) -> None:
+    """Rebuild the search space at the given refinement density.
+
+    Rebinds ``SPACE`` / ``GRID_SIZES`` / ``SPACE_SIZE`` / the decode grids
+    and clears every jit cache: the grids are trace-time constants baked
+    into compiled programs (table builds, decoders, the GA eval), so any
+    cached executable would silently keep the old grid."""
+    global GRID_DENSITY, SPACE, GRID_SIZES, SPACE_SIZE, _GRIDS, _GRID_TOKEN
+    density = max(1, int(density))
+    if density == GRID_DENSITY:
+        return
+    GRID_DENSITY = density
+    SPACE = _build_space(density)
+    GRID_SIZES = np.array([len(SPACE[f]) for f in FIELDS], np.int32)
+    SPACE_SIZE = int(np.prod(GRID_SIZES.astype(np.int64)))
+    _GRIDS = [jnp.asarray(SPACE[f]) for f in FIELDS]
+    _GRID_TOKEN = _compute_token()
+    jax.clear_caches()
 
 
 def decode(genomes: jnp.ndarray) -> DesignArrays:

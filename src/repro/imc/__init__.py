@@ -1,3 +1,10 @@
+# Version string of the IMC cost model's MATH (term structure, constants
+# baked into the formulas — not TechParams, which travel per request).
+# Bump on any change that can move a result bit for identical inputs; the
+# service result cache (serve.cache.request_key) keys on it, so persisted
+# entries from an older model can never be served against a newer one.
+COST_MODEL_VERSION = "2"
+
 from repro.imc.tech import TECH, TechParams  # noqa: F401
 from repro.imc.cost import (  # noqa: F401
     DesignArrays,

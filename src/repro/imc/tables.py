@@ -108,6 +108,30 @@ def build_tables_batched(
     return jax.vmap(lambda f, m: _build(f, m, tech))(feats, mask)
 
 
+def table_bytes(tables: WorkloadTables) -> int:
+    """Total table footprint in bytes (all leaves, any batch shape).
+
+    The factorized backend trades workload-depth independence for a
+    grid-resident memory cost: every leaf scales with the demand-grid
+    density (``demand`` is (W, R, C, Bc), so a ``configure_grid(d)``
+    densification multiplies it by ~d^3).  This is the number to weigh
+    against the per-generation gather cost when picking a grid density —
+    see benchmarks/README.md ("Fused generation kernel and grid
+    density")."""
+    return int(sum(leaf.size * leaf.dtype.itemsize for leaf in tables))
+
+
+def grid_table_shape() -> dict:
+    """Per-axis sizes of the ACTIVE grid that table leaves index over —
+    the density characterization key (R, C, Bc, Gn)."""
+    return {
+        "rows": len(space.SPACE["rows"]),
+        "cols": len(space.SPACE["cols"]),
+        "bits_cell": len(space.SPACE["bits_cell"]),
+        "glb_mb": len(space.SPACE["glb_mb"]),
+    }
+
+
 def evaluate_designs_tables(
     idx: jnp.ndarray, tables: WorkloadTables, tech: TechParams = TECH
 ) -> EvalResult:

@@ -1,0 +1,4 @@
+from repro.kernels.ga_gen_step.kernel import default_interpret, ga_gen_step_pallas
+from repro.kernels.ga_gen_step.ops import make_kernel_gen_step
+
+__all__ = ["default_interpret", "ga_gen_step_pallas", "make_kernel_gen_step"]

@@ -1,0 +1,61 @@
+"""Drop-in generation-step factory for ``core.ga._make_gen_step``.
+
+``make_kernel_gen_step`` returns a ``gen(carry, k)`` with the exact
+contract of the lax generation body (same one-uniform-block RNG layout,
+same ``((new_pop, new_scores), (children, child_scores))`` outputs), or
+``None`` when the eval context is not the table+indexed-objective shape
+the kernel understands — the caller then falls back to the lax path.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ga_gen_step.kernel import ga_gen_step_pallas
+
+
+def make_kernel_gen_step(
+    eval_fn,
+    ctx,
+    *,
+    pop_size: int,
+    n_genes: int,
+    sbx_prob: float,
+    sbx_eta: float,
+    mut_eta: float,
+    interpret: Optional[bool] = None,
+) -> Optional[Callable]:
+    """Build a whole-generation kernel step, or return ``None`` when the
+    (eval_fn, ctx) pair is not the table-backend indexed-objective form.
+
+    The engine marks its table+indexed eval closures with a
+    ``gen_kernel_tech`` attribute (the TechParams baked into the tables);
+    anything else — dense backends, custom objective callables, ad-hoc
+    eval functions in tests — is out of kernel scope by construction.
+    """
+    tech = getattr(eval_fn, "gen_kernel_tech", None)
+    if tech is None:
+        return None
+    if not (isinstance(ctx, tuple) and len(ctx) >= 3):
+        return None
+    tables, kind, area = ctx[0], ctx[-2], ctx[-1]
+
+    P, n = pop_size, n_genes
+    n_pairs = (P + 1) // 2
+    n_contest = 2 * n_pairs
+    tot = 2 * n_contest + n_pairs * n + n_pairs + n_pairs * n + 2 * P * n
+
+    def gen(carry, k):
+        pop, scores = carry
+        u = jax.random.uniform(k, (tot,))
+        new_pop, new_scores, children, child_scores = ga_gen_step_pallas(
+            pop, scores, u, tables,
+            jnp.asarray(kind), jnp.asarray(area),
+            tech=tech, sbx_prob=sbx_prob, sbx_eta=sbx_eta, mut_eta=mut_eta,
+            interpret=interpret,
+        )
+        return (new_pop, new_scores), (children, child_scores)
+
+    return gen

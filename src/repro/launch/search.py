@@ -234,7 +234,9 @@ def serve(args, ws: WorkloadSet, mesh) -> int:
     print(f"[serve] faults: {stats.failures} failures, {stats.retries} "
           f"retries, {stats.partials} partials, {stats.abandoned} abandoned")
     if cache is not None:
-        print(f"[serve] cache: {stats.cache_hits} submit hits this drain; "
+        print(f"[serve] cache: {stats.cache_hits} submit hits / "
+              f"{stats.cache_misses} misses this drain "
+              f"(hit rate {stats.cache_hit_rate():.1%}); tiers: "
               f"{cache.stats.summary()}")
     if args.out:
         payload = [

@@ -69,8 +69,17 @@ def request_key(req: SearchRequest) -> str:
     metadata (``priority``, ``deadline_s``) is excluded by design — see
     the module docstring.  ``objective`` is hashed even when
     ``obj_weights`` overrides it (conservative: a spurious miss is
-    correct, a spurious hit never is)."""
+    correct, a spurious hit never is).  Two process-level knobs also
+    enter the key because they change result bits for identical request
+    fields: ``imc.COST_MODEL_VERSION`` (a persisted disk tier must never
+    serve entries computed under an older model's math) and
+    ``space.grid_token()`` (the active grid density redefines what a
+    genome decodes to)."""
+    from repro.imc import COST_MODEL_VERSION
+
     h = hashlib.sha256()
+    h.update(COST_MODEL_VERSION.encode())
+    h.update(space.grid_token().encode())
     h.update(req.ws.fingerprint().encode())
     h.update(repr((
         req.objective, req.obj_weights, float(req.area_constr),
@@ -135,8 +144,17 @@ class CacheStats:
     puts: int = 0
     evictions: int = 0     # memory-tier LRU evictions (disk untouched)
 
-    def summary(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+    def hit_rate(self) -> float:
+        """Fraction of lookups served from EITHER tier (0.0 when no
+        lookups yet — a cold cache reports 0, not NaN)."""
+        served = self.hits + self.disk_hits
+        total = served + self.misses
+        return served / total if total else 0.0
+
+    def summary(self) -> Dict[str, Union[int, float]]:
+        out: Dict[str, Union[int, float]] = dataclasses.asdict(self)
+        out["hit_rate"] = self.hit_rate()
+        return out
 
 
 class ResultCache:

@@ -119,7 +119,12 @@ class ServiceStats:
     exhausted without partial results).
 
     ``cache_hits`` counts requests resolved AT SUBMIT from the result
-    cache (zero launches; they count as completed with 0 wait/latency).
+    cache (zero launches; they count as completed with 0 wait/latency);
+    ``cache_misses`` the submits that had a cache and missed it.
+    ``cache_hit_rate()`` is hits over looked-up submits (0.0 before any
+    lookup) — the service-level view of the cache's own
+    ``CacheStats.hit_rate()``, which additionally distinguishes the
+    memory and disk tiers.
 
     Percentiles over empty sample windows are ``None`` (a fresh service
     has no telemetry) — never NaN, which is invalid JSON and poisons
@@ -135,6 +140,7 @@ class ServiceStats:
     partials: int = 0
     abandoned: int = 0
     cache_hits: int = 0
+    cache_misses: int = 0
     wait_samples: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=SAMPLE_WINDOW))
     latency_samples: Deque[float] = dataclasses.field(
@@ -153,6 +159,12 @@ class ServiceStats:
         seconds; ``None`` when the sample window is empty."""
         return _percentile(self.latency_samples, q)
 
+    def cache_hit_rate(self) -> float:
+        """Fraction of cache-looked-up submits resolved at submit (0.0
+        before any lookup — a cacheless or cold service reports 0)."""
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
     def summary(self) -> Dict[str, Optional[float]]:
         return {
             "requests_per_s": self.requests_per_s(),
@@ -165,6 +177,8 @@ class ServiceStats:
             "partials": self.partials,
             "abandoned": self.abandoned,
             "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_hit_rate": self.cache_hit_rate(),
         }
 
 
@@ -324,6 +338,7 @@ class DSEService:
                 self.stats.wait_samples.append(0.0)
                 self.stats.latency_samples.append(0.0)
                 return rid
+            self.stats.cache_misses += 1
         if req.backend == "table":
             req.ws.tables(req.tech)  # fingerprint-memoized ingest prefill
         now = self.clock()

@@ -87,8 +87,13 @@ class WorkloadSet:
         from repro.imc.tables import build_tables_arrays
         from repro.imc.tech import TECH
 
+        from repro.core import space
+
         tech = tech or TECH
-        key = (self.fingerprint(), tech)
+        # grid_token: tables are built over the ACTIVE grid — a
+        # space.configure_grid() between calls must miss, never serve a
+        # stale-density table
+        key = (self.fingerprint(), tech, space.grid_token())
         hit = _TABLES_MEMO.get(key)
         if hit is None:
             hit = _TABLES_MEMO[key] = build_tables_arrays(self.feats, self.mask, tech)

@@ -279,12 +279,13 @@ def test_fingerprint_content_keyed(ws):
 
 
 def test_tables_memo_hits_across_repacked_sets(ws):
+    from repro.core import space
     from repro.imc.tech import TECH
 
     t1 = ws.tables()
     ws2 = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
     assert ws2.tables() is t1  # content-keyed, not object-keyed
-    assert (ws.fingerprint(), TECH) in _TABLES_MEMO
+    assert (ws.fingerprint(), TECH, space.grid_token()) in _TABLES_MEMO
 
 
 def test_engine_padded_table_cache_content_keyed(ws):

@@ -413,3 +413,54 @@ def test_empty_partial_result_contract(ws):
     assert res.workload_names == ws.names and res.objective == "ela"
     wreq = dataclasses.replace(req, obj_weights=(1.0, 2.0, 0.0))
     assert empty_partial_result(wreq).objective.startswith("weighted")
+
+
+# --------------------------------------------------- fused x segment cross
+@pytest.mark.parametrize("fused", [True, False],
+                         ids=["fused", "unfused"])
+def test_ga_segments_fused_parity(fused):
+    """Segment chains equal the single shot under BOTH epilogue modes,
+    and both modes equal each other — fused is pure program shape."""
+    key = jax.random.PRNGKey(19)
+    init = _init(4, POP)
+    full = run_ga(key, _toy_eval, pop_size=POP, generations=GENS,
+                  init_genomes=init + 0, fused=fused)
+    st = init_ga_state(key, _toy_eval, init)
+    hg = [np.asarray(st.genomes)[None]]
+    hs = [np.asarray(st.scores)[None]]
+    for k in (2, 2, 2):
+        st, (g, s) = run_ga_segment(st, _toy_eval, generations=k,
+                                    total_generations=GENS, fused=fused)
+        hg.append(np.asarray(g))
+        hs.append(np.asarray(s))
+    np.testing.assert_array_equal(np.concatenate(hg),
+                                  np.asarray(full.genomes))
+    np.testing.assert_array_equal(np.concatenate(hs),
+                                  np.asarray(full.scores))
+    # cross-mode: the fused single shot equals the unfused one
+    other = run_ga(key, _toy_eval, pop_size=POP, generations=GENS,
+                   init_genomes=init + 0, fused=not fused)
+    np.testing.assert_array_equal(np.asarray(full.genomes),
+                                  np.asarray(other.genomes))
+    np.testing.assert_array_equal(np.asarray(full.scores),
+                                  np.asarray(other.scores))
+
+
+def test_segmented_engine_fused_cross_parity(ws):
+    """Engine-level: fused segmented == unfused single shot, including
+    the mixed-subset slot packing and both finalize epilogues."""
+    reqs = _reqs(ws, 3, "table", seed0=40)
+    ref = SearchEngine(fused=False).run(reqs)
+    out = SearchEngine(segment_gens=2, fused=True).run(reqs)
+    for a, b in zip(out, ref):
+        _assert_result_equal(a, b)
+
+
+def test_segmented_engine_direct_seed_parity(ws):
+    """direct_seed crossed with segmentation: the segmented direct-seed
+    engine equals the single-shot direct-seed engine bit-for-bit."""
+    reqs = _reqs(ws, 3, "table", seed0=60)
+    ref = SearchEngine(direct_seed=True).run(reqs)
+    out = SearchEngine(direct_seed=True, segment_gens=2, fused=True).run(reqs)
+    for a, b in zip(out, ref):
+        _assert_result_equal(a, b)

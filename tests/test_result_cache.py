@@ -409,17 +409,20 @@ def test_tables_memo_lru_cap(monkeypatch):
     w2 = pack_workloads([("alexnet", cnn_workload("alexnet"))])
     w3 = pack_workloads([("vgg16", cnn_workload("vgg16"))])
 
+    from repro.core import space
+
+    gt = space.grid_token()  # memo keys carry the active grid's token
     t2 = w2.tables()
     w1.tables()
     w2.tables()  # refresh w2: w1 becomes LRU
     w3.tables()  # evicts w1
     assert len(pack._TABLES_MEMO) == 2
-    assert (w1.fingerprint(), TECH) not in pack._TABLES_MEMO
-    assert (w2.fingerprint(), TECH) in pack._TABLES_MEMO
+    assert (w1.fingerprint(), TECH, gt) not in pack._TABLES_MEMO
+    assert (w2.fingerprint(), TECH, gt) in pack._TABLES_MEMO
 
     # evicted entries simply rebuild, to identical tables
     t1b = w1.tables()  # evicts w2
-    assert (w2.fingerprint(), TECH) not in pack._TABLES_MEMO
+    assert (w2.fingerprint(), TECH, gt) not in pack._TABLES_MEMO
     t2b = w2.tables()
     for a, b in zip(jax.tree_util.tree_leaves(t2),
                     jax.tree_util.tree_leaves(t2b)):
@@ -441,3 +444,79 @@ def test_service_stats_empty_percentiles_are_none_not_nan():
     st.wait_samples.append(1.0)
     st.latency_samples.append(2.0)
     assert st.wait_p(0) == 1.0 and st.latency_p(100) == 2.0
+
+
+# ------------------------------------------- cost-model version + grid keying
+def test_request_key_changes_on_cost_model_version_bump(ws, monkeypatch):
+    """PR-8 satellite: a COST_MODEL_VERSION bump must MISS every existing
+    cache entry (persisted disk tiers can outlive a model change), while
+    the same version keeps hitting."""
+    import repro.imc as imc
+
+    req = _reqs(ws, 1)[0]
+    k_before = request_key(req)
+    assert request_key(req) == k_before  # same version -> same key
+    monkeypatch.setattr(imc, "COST_MODEL_VERSION",
+                        imc.COST_MODEL_VERSION + ".bumped")
+    assert request_key(req) != k_before
+
+
+def test_cache_misses_after_cost_model_version_bump(ws, monkeypatch):
+    import repro.imc as imc
+
+    req = _reqs(ws, 1, seed0=90)[0]
+    cache = ResultCache(capacity=8)
+    res = SearchEngine().run([req])[0]
+    assert cache.put(req, res)
+    assert cache.get(req) is not None
+    monkeypatch.setattr(imc, "COST_MODEL_VERSION",
+                        imc.COST_MODEL_VERSION + ".bumped")
+    assert cache.get(req) is None  # old entry invisible under the new model
+
+
+def test_request_key_changes_with_grid_density(ws):
+    """The active grid density redefines what a genome decodes to, so it
+    must enter the request key."""
+    from repro.core import space
+
+    req = _reqs(ws, 1)[0]
+    k1 = request_key(req)
+    try:
+        space.configure_grid(2)
+        assert request_key(req) != k1
+    finally:
+        space.configure_grid(1)
+    assert request_key(req) == k1
+
+
+# -------------------------------------------------- hit-rate telemetry
+def test_cache_stats_hit_rate(ws):
+    cache = ResultCache(capacity=8)
+    req = _reqs(ws, 1, seed0=91)[0]
+    assert cache.stats.hit_rate() == 0.0  # cold: 0, never NaN
+    assert cache.get(req) is None
+    assert cache.stats.hit_rate() == 0.0
+    res = SearchEngine().run([req])[0]
+    cache.put(req, res)
+    assert cache.get(req) is not None
+    assert cache.get(req) is not None
+    s = cache.stats.summary()
+    assert s["hits"] == 2 and s["misses"] == 1
+    assert s["hit_rate"] == pytest.approx(2 / 3)
+
+
+def test_service_stats_cache_hit_miss_counters(ws):
+    """ServiceStats counts submit-time lookups: one miss then one hit,
+    and the summary carries the rate."""
+    cache = ResultCache(capacity=8)
+    svc = DSEService(result_cache=cache)
+    req = _reqs(ws, 1, seed0=92)[0]
+    svc.submit(req)
+    svc.drain()
+    assert (svc.stats.cache_hits, svc.stats.cache_misses) == (0, 1)
+    svc.submit(req)  # identical resubmit: resolves at submit
+    assert (svc.stats.cache_hits, svc.stats.cache_misses) == (1, 1)
+    s = svc.stats.summary()
+    assert s["cache_hits"] == 1 and s["cache_misses"] == 1
+    assert s["cache_hit_rate"] == pytest.approx(0.5)
+    assert ServiceStats().cache_hit_rate() == 0.0  # cacheless: 0, not NaN

@@ -1,0 +1,47 @@
+"""CI regression gate: the fused fast path must outrun the unfused table
+row.
+
+Reads ``experiments/search_throughput.json`` (as written by the
+bench-smoke / perf-smoke legs just before this runs) and fails when the
+``fused`` row's warm designs/s fell below the ``table`` row's separate
+config — the fused generation step plus direct seeding exists ONLY as a
+speedup over that baseline, so "slower than unfused" is a regression by
+definition, whatever the absolute host speed.  Comparing two rows
+measured on the SAME host in the SAME job keeps the gate meaningful on
+throttled CI runners where an absolute designs/s floor would flake.
+
+Exit 0 with a one-line verdict, exit 1 with both numbers on regression.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+EXP = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def main() -> int:
+    path = EXP / "search_throughput.json"
+    if not path.exists():
+        print(f"[fused-gate] {path} missing — run the bench first")
+        return 1
+    data = json.loads(path.read_text())
+    fused = data.get("fused", {}).get("designs_per_s")
+    table = data.get("table", {}).get("separate", {}).get("designs_per_s")
+    if fused is None or table is None:
+        print("[fused-gate] need both 'fused' and 'table' rows recorded "
+              f"(have fused={fused is not None}, table={table is not None})")
+        return 1
+    if fused < table:
+        print(f"[fused-gate] REGRESSION: fused warm {fused:,.0f} designs/s "
+              f"< unfused table row {table:,.0f} designs/s")
+        return 1
+    print(f"[fused-gate] ok: fused warm {fused:,.0f} designs/s >= "
+          f"unfused table row {table:,.0f} designs/s "
+          f"({fused / table:.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
