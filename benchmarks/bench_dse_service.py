@@ -20,7 +20,12 @@ records:
   * designs_per_s          — the e2e figure in designs evaluated/s,
   * launches / programs    — XLA launches in one drain, and how many NEW
                              seeding/GA programs the drain compiled (the
-                             acceptance bound is <= 4; steady state is 0).
+                             acceptance bound is <= 4; steady state is 0),
+  * transfer               — host-transfer bytes and launch count of one
+                             warm drain under BOTH engine modes
+                             (``pipelined=True`` thin epilogue vs the
+                             sequential history-syncing default), plus
+                             their bytes-per-launch reduction ratio.
 
 ``--smoke`` is the CI serve-smoke leg: ~32 mixed requests at a tiny
 operating point, asserting every result arrives with a finite best
@@ -72,8 +77,8 @@ def run(quick: bool = False, verbose: bool = True, mesh=None,
     warm_reps = 2 if quick else 3
     per_search = POP * (GENS + 1)
 
-    def drain(seed0: int) -> "DSEService":
-        svc = DSEService(mesh=mesh)
+    def drain(seed0: int, pipelined: bool = False) -> "DSEService":
+        svc = DSEService(mesh=mesh, pipelined=pipelined)
         svc.submit_all(paper_request_mix(
             ws, n, backend=backend, pop_size=POP, generations=GENS,
             seed0=seed0,
@@ -108,6 +113,28 @@ def run(quick: bool = False, verbose: bool = True, mesh=None,
         "speedup_vs_paper": (n * per_search / warm) * PAPER_S_PER_DESIGN,
         "paper_s_per_design": PAPER_S_PER_DESIGN,
     }
+    # host-transfer footprint of one warm drain under BOTH engine modes:
+    # pipelined (thin on-device top-k epilogue + overlapped dispatch/
+    # harvest) vs the sequential history-syncing default
+    out["transfer"] = {}
+    for pipelined in (False, True):
+        t0 = time.time()
+        svc_x = drain(7777, pipelined=pipelined)
+        dt = time.time() - t0
+        eng = svc_x.engine
+        mode = "pipelined" if pipelined else "sequential"
+        out["transfer"][mode] = {
+            "warm_s": dt,
+            "launches": int(eng.launches),
+            "transfer_bytes": int(eng.transfer_bytes),
+            "transfer_bytes_per_launch":
+                eng.transfer_bytes / max(1, eng.launches),
+            "dispatch_gap_p50_s": svc_x.stats.dispatch_gap_p(50),
+            "device_idle_s": svc_x.stats.device_idle_s,
+        }
+    seq_b = out["transfer"]["sequential"]["transfer_bytes_per_launch"]
+    pip_b = out["transfer"]["pipelined"]["transfer_bytes_per_launch"]
+    out["transfer"]["reduction_x"] = seq_b / max(1.0, pip_b)
     if verbose:
         print(f"[dse-service] {n} mixed requests: cold {cold:.2f}s "
               f"({programs} programs), warm {warm:.2f}s -> "
@@ -115,6 +142,10 @@ def run(quick: bool = False, verbose: bool = True, mesh=None,
               f"{n*per_search/warm:.0f} designs/s, latency p50/p99 "
               f"{_fmt(st.latency_p(50))}/{_fmt(st.latency_p(99))}s "
               f"({svc.stats.launches} launches/drain)")
+        print(f"[dse-service] transfer/launch: sequential {seq_b:.0f} B, "
+              f"pipelined {pip_b:.0f} B "
+              f"({out['transfer']['reduction_x']:.1f}x thinner, "
+              f"{out['transfer']['pipelined']['launches']} launches)")
     return out
 
 

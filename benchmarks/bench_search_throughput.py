@@ -37,7 +37,11 @@ POP, GENS = 40, 10
 
 
 def _block(results) -> None:
-    jax.block_until_ready([r.ga.scores for r in results])
+    # pipelined (transfer-thin) results carry ga=None — their top arrays
+    # are host numpy already, so blocking on them is the right no-op
+    jax.block_until_ready(
+        [r.ga.scores if r.ga is not None else r.top_scores for r in results]
+    )
 
 
 def run(quick: bool = False, verbose: bool = True, mesh=None,
@@ -215,6 +219,92 @@ def run_fused(quick: bool = False, verbose: bool = True,
     return out
 
 
+def run_pipelined(quick: bool = False, verbose: bool = True) -> dict:
+    """The transfer-thin row: the SAME configuration as the ``fused`` row's
+    baseline-grid entry (B = seeds x W separate searches, table backend,
+    fused generation step + direct table seeding) executed through a
+    ``pipelined=True`` engine — the GA program computes its top-k-unique
+    epilogue on device and only (B, top_k, n) genomes, (B, top_k) scores
+    and (B, G+1) convergence cross the wire instead of the full (B, G+1,
+    P, n) history.
+
+    Records warm designs/s plus host-transfer bytes per launch for BOTH
+    the thin and the history-syncing engine (``transfer_reduction_x`` is
+    their ratio).  ``tools/check_fused_gate.py`` gates
+    ``designs_per_s >= fused row`` and ``transfer_reduction_x >= 10``."""
+    import numpy as np
+
+    from repro.core.engine import SearchEngine
+    from repro.core.search import batched_search
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    W = ws.n
+    seeds = 10 if quick else 40
+    B = seeds * W
+    warm_reps = 2 if quick else 4
+    per_search = POP * (GENS + 1)
+    n = B * per_search
+
+    keys = np.concatenate([
+        np.asarray(jax.random.split(jax.random.PRNGKey(100 + s), W))
+        for s in range(seeds)
+    ])
+    feats = np.tile(np.asarray(ws.feats)[:, None], (seeds, 1, 1, 1))
+    mask = np.tile(np.asarray(ws.mask)[:, None], (seeds, 1, 1))
+    names = [(w,) for w in PAPER_WORKLOADS] * seeds
+
+    thin = SearchEngine(max_slots=B, fused=True, direct_seed=True,
+                        pipelined=True)
+    hist = SearchEngine(max_slots=B, fused=True, direct_seed=True)
+
+    def go(eng):
+        return batched_search(keys, feats, mask, names=names,
+                              pop_size=POP, generations=GENS,
+                              backend="table", engine=eng)
+
+    t0 = time.time()
+    _block(go(thin))
+    cold = time.time() - t0
+    warm = float("inf")
+    for _ in range(warm_reps):
+        t0 = time.time()
+        _block(go(thin))
+        warm = min(warm, time.time() - t0)
+
+    # transfer accounting: one dedicated warm run per engine (the history
+    # engine's program is also warmed first so its number is steady-state)
+    thin.reset_transfer_stats()
+    _block(go(thin))
+    thin_bpl = thin.transfer_bytes / max(1, thin.launches)
+    _block(go(hist))
+    hist.reset_transfer_stats()
+    _block(go(hist))
+    hist_bpl = hist.transfer_bytes / max(1, hist.launches)
+
+    out = {
+        "pop": POP, "gens": GENS, "searches": B, "backend": "table",
+        "config": "separate", "fused": True, "direct_seed": True,
+        "pipelined": True, "warm_reps": warm_reps,
+        "paper_s_per_design": PAPER_S_PER_DESIGN,
+        "cold_s": cold,
+        "warm_s": warm,
+        "designs_per_s": n / warm,
+        "speedup_vs_paper": (n / warm) * PAPER_S_PER_DESIGN,
+        "launches": int(thin.launches),
+        "transfer_bytes_per_launch": thin_bpl,
+        "history_transfer_bytes_per_launch": hist_bpl,
+        "transfer_reduction_x": hist_bpl / max(1.0, thin_bpl),
+    }
+    if verbose:
+        print(f"[search-thru] pipelined x{B}: cold {cold:.2f}s, "
+              f"warm {warm*1e3:.1f}ms -> {n/warm/1e6:.3f}M designs/s; "
+              f"{thin_bpl:.0f} B/launch vs {hist_bpl:.0f} B/launch history "
+              f"({out['transfer_reduction_x']:.1f}x thinner)")
+    return out
+
+
 def main(argv=None) -> int:
     import argparse
 
@@ -243,7 +333,21 @@ def main(argv=None) -> int:
         help="comma-separated grid densities for the --fused sweep "
              "(the first is the baseline the CI gate reads)",
     )
+    ap.add_argument(
+        "--pipelined", action="store_true",
+        help="run the fast-path config through a transfer-thin pipelined "
+             "engine (on-device top-k epilogue) and record the row under "
+             "'pipelined' (warm designs/s + host-transfer bytes/launch)",
+    )
     args = ap.parse_args(argv)
+
+    if args.pipelined:
+        if args.mesh or args.backend != "jnp" or args.fused:
+            ap.error("--pipelined is its own configuration; "
+                     "drop --mesh/--backend/--fused")
+        res = run_pipelined(quick=args.quick)
+        write_search_throughput(res, row="pipelined")
+        return 0
 
     if args.fused:
         if args.mesh or args.backend != "jnp":

@@ -46,7 +46,7 @@ def prepare_search_mesh(spec: str):
 
 
 # named rows kept alongside the top-level (dense, unsharded) trajectory
-EXTRA_ROWS = ("sharded", "table", "service", "cache", "fused")
+EXTRA_ROWS = ("sharded", "table", "service", "cache", "fused", "pipelined")
 
 
 def write_search_throughput(res: dict, *, row: str = None) -> Path:
@@ -109,6 +109,10 @@ def main(argv=None) -> int:
     sthru_f = bench_search_throughput.run_fused(
         quick=args.quick, densities=(1, 2) if args.quick else (1, 2, 3))
     write_search_throughput(sthru_f, row="fused")
+
+    print("\n== search throughput (pipelined transfer-thin engine) ==")
+    sthru_p = bench_search_throughput.run_pipelined(quick=args.quick)
+    write_search_throughput(sthru_p, row="pipelined")
 
     print("\n== DSE service (continuous batching of mixed requests) ==")
     svc = bench_dse_service.run(quick=args.quick)

@@ -55,9 +55,12 @@ from repro.core import space
 from repro.core.ga import (
     GAResult,
     GAState,
+    GAThin,
+    ga_epilogue_batched,
     init_ga_state_batched,
     run_ga_batched,
     run_ga_batched_segment,
+    run_ga_batched_thin,
 )
 from repro.core.objectives import (
     OBJECTIVE_INDEX,
@@ -81,7 +84,8 @@ INDEXED = "__indexed__"
 class SearchResult:
     workload_names: Tuple[str, ...]
     objective: str
-    ga: Optional[GAResult]  # None only for empty partials (never launched)
+    ga: Optional[GAResult]  # None for empty partials (never launched) and
+    # for pipelined (transfer-thin) results, whose history never reaches host
     top_designs: List[Dict[str, float]]  # decoded, deduped, best-first
     top_scores: np.ndarray
     top_genomes: np.ndarray
@@ -527,6 +531,41 @@ def _finalize_batch(
     return out
 
 
+def _finalize_batch_thin(
+    thin_np: GAThin, requests: Sequence["SearchRequest"],
+    *, partial: bool = False,
+) -> List[SearchResult]:
+    """``_finalize_batch`` over the thin epilogue outputs instead of the
+    full history: the device already selected each slot's top-k-unique
+    designs (``ga._thin_epilogue``, K = the plan's max ``top_k``) and the
+    convergence curve, so all that is left is slicing each request's own
+    ``top_k`` prefix off the padded arrays and decoding the few kept
+    genomes.  The selection is prefix-stable (ordered by score rank), so
+    a request asking for fewer than K designs gets exactly the designs
+    the history path would have kept — bit-identical fields, except
+    ``ga`` is ``None``: the history never crossed the wire."""
+    out = []
+    for i, r in enumerate(requests):
+        kept = int(min(int(thin_np.n_kept[i]), r.top_k))
+        top_g = thin_np.top_genomes[i][:kept]
+        top_s = thin_np.top_scores[i][:kept]
+        conv = thin_np.convergence[i]
+        out.append(SearchResult(
+            workload_names=tuple(r.ws.names),
+            objective=_objective_label(r),
+            ga=None,
+            top_designs=space.design_dicts_from_indices(
+                space.decode_indices_np(top_g)),
+            top_scores=top_s,
+            top_genomes=top_g,
+            convergence=conv,
+            valid=bool(kept),
+            partial=bool(partial),
+            generations=int(conv.shape[-1]) - 1,
+        ))
+    return out
+
+
 def _finalize(
     ga: GAResult, names: Sequence[str], objective: str, top_k: int,
     *, partial: bool = False,
@@ -849,6 +888,28 @@ class _LaunchPrep:
     init: Any
     ctx: tuple
     eval_fn: Callable
+    # deferred seed-feasibility check (pipelined dispatch only): syncing
+    # the seeder's counts would serialize back-to-back dispatches, so the
+    # check moves to harvest time.  None when already verified eagerly.
+    seed_check: Optional[Callable] = None
+
+
+@dataclasses.dataclass
+class PendingLaunch:
+    """A dispatched-but-not-harvested plan: the handle ``dispatch``
+    returns and ``harvest`` consumes.  Exactly one of the payload fields
+    is set — ``thin`` (un-synced device ``GAThin``, pipelined single-shot
+    and segmented finals), ``ga`` (un-synced device ``GAResult``,
+    sequential single-shot), or ``results`` (already-finalized host
+    results, sequential segmented — that path syncs per segment anyway).
+    Holding the device arrays here WITHOUT ``np.asarray`` is what lets
+    chunk i's host finalize overlap chunk i+1's device compute."""
+
+    plan: BatchPlan
+    thin: Optional[GAThin] = None
+    ga: Optional[GAResult] = None
+    results: Optional[List[SearchResult]] = None
+    seed_check: Optional[Callable] = None
 
 
 class SearchEngine:
@@ -885,13 +946,30 @@ class SearchEngine:
         chunk-mates and slot shape, unlike ``plan_key``), and ``run()``
         resolves cached requests without planning them — zero GA
         launches on a full hit.
+      * ``pipelined``       — the transfer-thin fast path: the top-k
+        selection and convergence curve are computed ON DEVICE by the
+        thin epilogue fused onto the GA program, so a launch syncs
+        (S, K, n) genomes + (S, K) scores + (S, G+1) convergence instead
+        of the full (S, G+1, P, n) history, and ``execute`` splits into
+        ``dispatch``/``harvest`` so ``run()`` (and a pipelined service
+        drain) overlaps chunk i's host finalize with chunk i+1's device
+        compute.  Result fields are bit-identical to the sequential path
+        (tests/test_pipelined.py) EXCEPT ``SearchResult.ga`` is ``None``
+        — which also means pipelined results are not result-CACHEABLE
+        (``ResultCache.put`` refuses them); cache GETs still serve full
+        entries, and fault partials / checkpoints stay full-history and
+        bit-identical either way.
+
+    ``transfer_bytes`` / ``launches`` count device->host bytes and plan
+    launches since construction (or ``reset_transfer_stats()``) — the
+    benches record bytes/launch from them.
     """
 
     def __init__(self, *, mesh=None, max_slots: int = 64,
                  segment_gens: Optional[int] = None, segment_retries: int = 1,
                  checkpoint_dir: Optional[str] = None, checkpoint_every: int = 1,
                  result_cache=None, fused: Optional[bool] = None,
-                 direct_seed: bool = False):
+                 direct_seed: bool = False, pipelined: bool = False):
         self.mesh = mesh
         self.max_slots = int(max_slots)
         # fused: the GA survival-epilogue knob (None = ga.default_fused();
@@ -903,6 +981,12 @@ class SearchEngine:
         # backend on the shared rejection program (table-vs-dense
         # trajectory closeness in tests/test_tables.py depends on that).
         self.direct_seed = bool(direct_seed)
+        # pipelined: thin on-device epilogue + overlapped dispatch/harvest
+        # (bit-identical results with ga=None — see the class docstring)
+        self.pipelined = bool(pipelined)
+        # device->host transfer telemetry, read by the benches/service
+        self.transfer_bytes = 0
+        self.launches = 0
         self.segment_gens = None if segment_gens is None else int(segment_gens)
         self.segment_retries = int(segment_retries)
         self.checkpoint_dir = checkpoint_dir
@@ -940,10 +1024,31 @@ class SearchEngine:
                     todo.append(i)
         plans = plan_batch([requests[i] for i in todo],
                            max_slots=self.max_slots)
-        for plan in plans:
-            for i, res in zip(plan.indices, self.execute(plan, mesh=mesh)):
-                out[todo[i]] = res
+        if self.pipelined:
+            # dispatch every chunk back-to-back (JAX async dispatch: the
+            # launches queue without a host sync), then harvest in order —
+            # chunk i's host finalize overlaps chunk i+1's device compute
+            pending = [self.dispatch(p, mesh=mesh) for p in plans]
+            for plan, pend in zip(plans, pending):
+                for i, res in zip(plan.indices, self.harvest(pend)):
+                    out[todo[i]] = res
+        else:
+            for plan in plans:
+                for i, res in zip(plan.indices, self.execute(plan, mesh=mesh)):
+                    out[todo[i]] = res
         return out  # type: ignore[return-value]
+
+    def reset_transfer_stats(self) -> None:
+        self.transfer_bytes = 0
+        self.launches = 0
+
+    def _sync(self, x) -> np.ndarray:
+        """The engine's ONE device->host sync point: every harvest-side
+        ``np.asarray`` goes through here so ``transfer_bytes`` stays an
+        exact count of what crossed the wire."""
+        a = np.asarray(x)
+        self.transfer_bytes += a.nbytes
+        return a
 
     # ----------------------------------------------------------- execution
     def _padded_request_tables(self, req: SearchRequest, pad_w: int):
@@ -979,22 +1084,59 @@ class SearchEngine:
         the history accumulated so far).  Only the segmented path has
         mid-search boundaries to report from; the single-shot path never
         calls it.  Completed requests persist into ``result_cache``."""
+        return self.harvest(self.dispatch(plan, mesh=mesh,
+                                          on_progress=on_progress))
+
+    def dispatch(self, plan: BatchPlan, *, mesh=None,
+                 on_progress: Optional[Callable[[int, SearchResult], None]] = None,
+                 ) -> PendingLaunch:
+        """Launch a plan WITHOUT syncing its outputs to host: the GA (and,
+        when ``pipelined``, the thin epilogue) is enqueued and the device
+        arrays ride back inside a ``PendingLaunch`` for a later
+        ``harvest``.  Dispatching several plans back-to-back queues their
+        programs on the device, so the harvests' host work overlaps the
+        remaining device compute.  The segmented path runs its guarded
+        segment chain here (it is a synchronous loop by construction) but
+        still defers its final sync/finalize to ``harvest``."""
         mesh = self.mesh if mesh is None else mesh
         r0 = plan.requests[0]
         k = self.segment_gens
         if k is not None and 0 < k < int(r0.generations):
-            return self._execute_segmented(plan, mesh, k,
-                                           on_progress=on_progress)
-        prep = self._prepare(plan, mesh)
+            return self._dispatch_segmented(plan, mesh, k,
+                                            on_progress=on_progress)
+        prep = self._prepare(plan, mesh, defer_seed=self.pipelined)
+        self.launches += 1
+        if self.pipelined:
+            thin = run_ga_batched_thin(
+                prep.k_ga, prep.eval_fn,
+                pop_size=r0.pop_size, generations=r0.generations,
+                init_genomes=prep.init, ctx=prep.ctx, fused=self.fused,
+                top_k=max(int(r.top_k) for r in plan.requests),
+            )
+            return PendingLaunch(plan=plan, thin=thin,
+                                 seed_check=prep.seed_check)
         ga = run_ga_batched(
             prep.k_ga, prep.eval_fn,
             pop_size=r0.pop_size, generations=r0.generations,
             init_genomes=prep.init, ctx=prep.ctx, fused=self.fused,
         )
-        # one device->host transfer per field, then pure-numpy batched prep
-        ga_np = GAResult(*(np.asarray(f) for f in ga))
-        results = _finalize_batch(ga_np, plan.requests)
-        self._cache_completed(plan, results)
+        return PendingLaunch(plan=plan, ga=ga, seed_check=prep.seed_check)
+
+    def harvest(self, pending: PendingLaunch) -> List[SearchResult]:
+        """Sync a dispatched plan's (small) outputs, finalize, and persist
+        completed results into the cache — the host half of ``execute``."""
+        if pending.seed_check is not None:
+            pending.seed_check()
+        if pending.results is not None:
+            results = pending.results
+        elif pending.thin is not None:
+            thin_np = GAThin(*(self._sync(f) for f in pending.thin))
+            results = _finalize_batch_thin(thin_np, pending.plan.requests)
+        else:
+            # one device->host transfer per field, then pure-numpy prep
+            ga_np = GAResult(*(self._sync(f) for f in pending.ga))
+            results = _finalize_batch(ga_np, pending.plan.requests)
+        self._cache_completed(pending.plan, results)
         return results
 
     def _cache_completed(self, plan: BatchPlan,
@@ -1006,9 +1148,13 @@ class SearchEngine:
             for r, res in zip(plan.requests, results):
                 self.result_cache.put(r, res)
 
-    def _prepare(self, plan: BatchPlan, mesh) -> _LaunchPrep:
+    def _prepare(self, plan: BatchPlan, mesh,
+                 defer_seed: bool = False) -> _LaunchPrep:
         """Pack, place and seed a plan up to (but not including) the GA
-        launch.  Shared verbatim by both execution paths."""
+        launch.  Shared verbatim by both execution paths.  With
+        ``defer_seed`` the seeder's feasibility counts are NOT synced
+        here — the returned ``seed_check`` raises at harvest time instead
+        — so back-to-back pipelined dispatches never block on device."""
         reqs = plan.requests
         r0 = reqs[0]
         backend, tech = r0.backend, r0.tech
@@ -1070,8 +1216,9 @@ class SearchEngine:
         else:
             ctx = (feats, mask)
 
-        init = self._init_populations(packed, k_seed, feats, mask, place,
-                                      tables=tables)
+        init, seed_check = self._init_populations(
+            packed, k_seed, feats, mask, place, tables=tables,
+            defer=defer_seed)
 
         # objective tail: traced exponent weights, or traced (kind, area)
         if r0.obj_weights is not None:
@@ -1087,7 +1234,8 @@ class SearchEngine:
             eval_fn = _ctx_eval(INDEXED, 0.0, tech, backend)
 
         return _LaunchPrep(packed=packed, place=place, k_ga=k_ga,
-                           init=init, ctx=ctx, eval_fn=eval_fn)
+                           init=init, ctx=ctx, eval_fn=eval_fn,
+                           seed_check=seed_check)
 
     # ------------------------------------------------- segmented execution
     def _place_state(self, state: GAState, place) -> GAState:
@@ -1133,10 +1281,10 @@ class SearchEngine:
             best_score=flat_s[b] if flat_s.size else np.float32(np.inf),
         )
 
-    def _execute_segmented(
+    def _dispatch_segmented(
         self, plan: BatchPlan, mesh, seg: int,
         on_progress: Optional[Callable[[int, SearchResult], None]] = None,
-    ) -> List[SearchResult]:
+    ) -> PendingLaunch:
         """Advance the plan ``seg`` generations per launch with a NaN
         score guard, retry-from-last-good-state, and optional on-disk
         checkpoints.  The chained segments are bit-identical to the
@@ -1144,44 +1292,80 @@ class SearchEngine:
         segment, ``on_progress`` (if given) receives each request's
         best-so-far snapshot — finalized from the same accumulated
         history the fault/deadline partials use, so the streamed best is
-        monotone non-increasing and exactly the history minimum."""
+        monotone non-increasing and exactly the history minimum.
+
+        The generation counter is derived HOST-side: 0 for a fresh init,
+        or the restored checkpoint's (host numpy) ``state.gen`` — the
+        warm loop never syncs the device counter.
+
+        ``pipelined`` keeps the accumulated history ON DEVICE: the guard
+        blocks on a 1-byte NaN scalar instead of the full per-segment
+        history, ``on_progress`` snapshots flow through the thin epilogue
+        (``ga_epilogue_batched``), and the final epilogue is dispatched
+        un-synced for ``harvest``.  Checkpoints and fault partials still
+        sync the FULL history at their (cold) boundaries, so both stay
+        bit-identical to the sequential path."""
         from repro.checkpoint import store
 
         reqs = plan.requests
         r0 = reqs[0]
         G = int(r0.generations)
+        K = max(int(r.top_k) for r in reqs)
+        thin = self.pipelined
         ck_dir = self._ckpt_dir(plan)
 
         state: Optional[GAState] = None
-        gh = sh = None  # accumulated history, (S, done+1, P, n) / (S, done+1, P)
+        done = 0
+        # accumulated history, (S, done+1, P, n) / (S, done+1, P):
+        # host numpy (sequential) or device arrays (pipelined)
+        gh = sh = None
         if ck_dir is not None and store.latest_step(ck_dir) is not None:
             template = {"state": GAState(0, 0, 0, 0), "gh": 0, "sh": 0}
             tree, _ = store.restore(ck_dir, template)
             state = GAState(*tree["state"])
+            # restored fields are host arrays — this int() never blocks
+            done = int(np.asarray(state.gen).reshape(-1)[0])
             gh, sh = np.asarray(tree["gh"]), np.asarray(tree["sh"])
+            if thin:
+                gh, sh = jnp.asarray(gh), jnp.asarray(sh)
+
+        def host_hist():
+            if gh is None:
+                return None, None
+            if thin:
+                return self._sync(gh), self._sync(sh)
+            return gh, sh
 
         try:
             prep = self._prepare(plan, mesh)
+            self.launches += 1
             if state is None:
                 state = init_ga_state_batched(
                     prep.k_ga, prep.eval_fn, prep.init, ctx=prep.ctx
                 )
-                s0 = np.asarray(state.scores)
-                if np.isnan(s0).any():
-                    raise NonFiniteScoreError(
-                        "NaN scores in the seed evaluation"
-                    )
-                gh = np.asarray(state.genomes)[:, None]
-                sh = s0[:, None]
+                if thin:
+                    if bool(jnp.isnan(state.scores).any()):
+                        raise NonFiniteScoreError(
+                            "NaN scores in the seed evaluation"
+                        )
+                    gh = state.genomes[:, None]
+                    sh = state.scores[:, None]
+                else:
+                    s0 = self._sync(state.scores)
+                    if np.isnan(s0).any():
+                        raise NonFiniteScoreError(
+                            "NaN scores in the seed evaluation"
+                        )
+                    gh = self._sync(state.genomes)[:, None]
+                    sh = s0[:, None]
         except EngineFault:
             raise
         except Exception as e:
             raise EngineFault(
                 f"segmented launch setup failed: {e}",
-                partials=self._partial_results(plan, gh, sh),
+                partials=self._partial_results(plan, *host_hist()),
             ) from e
 
-        done = int(np.asarray(state.gen).reshape(-1)[0])
         seg_idx = 0
         while done < G:
             k_gens = min(seg, G - done)
@@ -1194,12 +1378,19 @@ class SearchEngine:
                         generations=k_gens, total_generations=G,
                         fused=self.fused,
                     )
-                    hs_np = np.asarray(hs)  # (S, k, P)
-                    if np.isnan(hs_np).any():
-                        raise NonFiniteScoreError(
-                            f"NaN scores in segment at generation {done}"
-                        )
-                    hg_np = np.asarray(hg)
+                    if thin:
+                        # guard on ONE reduced byte; the history stays put
+                        if bool(jnp.isnan(hs).any()):
+                            raise NonFiniteScoreError(
+                                f"NaN scores in segment at generation {done}"
+                            )
+                    else:
+                        hs_np = self._sync(hs)  # (S, k, P)
+                        if np.isnan(hs_np).any():
+                            raise NonFiniteScoreError(
+                                f"NaN scores in segment at generation {done}"
+                            )
+                        hg_np = self._sync(hg)
                     break
                 except Exception as e:
                     attempt += 1
@@ -1207,33 +1398,49 @@ class SearchEngine:
                         raise EngineFault(
                             f"segment at generation {done} failed after "
                             f"{attempt} attempts: {e}",
-                            partials=self._partial_results(plan, gh, sh),
+                            partials=self._partial_results(plan, *host_hist()),
                             generations_done=done,
                         ) from e
                     # retry re-launches from the SAME (undonated) state
-            gh = np.concatenate([gh, hg_np], axis=1)
-            sh = np.concatenate([sh, hs_np], axis=1)
+            if thin:
+                gh = jnp.concatenate([gh, hg], axis=1)
+                sh = jnp.concatenate([sh, hs], axis=1)
+            else:
+                gh = np.concatenate([gh, hg_np], axis=1)
+                sh = np.concatenate([sh, hs_np], axis=1)
             state = new_state
             done += k_gens
             seg_idx += 1
             if (ck_dir is not None and done < G
                     and seg_idx % self.checkpoint_every == 0):
-                host_state = GAState(*(np.asarray(f) for f in state))
+                host_state = GAState(*(self._sync(f) for f in state))
+                hg_ck, hs_ck = host_hist()
                 store.save(ck_dir, done,
-                           {"state": host_state, "gh": gh, "sh": sh})
+                           {"state": host_state, "gh": hg_ck, "sh": hs_ck})
             if on_progress is not None and done < G:
                 # mid-search anytime stream: best-so-far per request,
                 # finalized over the history up to this boundary (the
                 # final segment's snapshot IS the returned result)
-                for i, r in enumerate(reqs):
-                    on_progress(i, _finalize(
-                        self._history_result(gh[i], sh[i]),
-                        r.ws.names, _objective_label(r), r.top_k,
-                        partial=True,
-                    ))
+                if thin:
+                    snap = GAThin(*(self._sync(f) for f in
+                                    ga_epilogue_batched(gh, sh, top_k=K)))
+                    for i, res in enumerate(
+                            _finalize_batch_thin(snap, reqs, partial=True)):
+                        on_progress(i, res)
+                else:
+                    for i, r in enumerate(reqs):
+                        on_progress(i, _finalize(
+                            self._history_result(gh[i], sh[i]),
+                            r.ws.names, _objective_label(r), r.top_k,
+                            partial=True,
+                        ))
 
         if ck_dir is not None:
             store.clear(ck_dir)
+        if thin:
+            # final epilogue rides back un-synced; harvest does the rest
+            return PendingLaunch(
+                plan=plan, thin=ga_epilogue_batched(gh, sh, top_k=K))
         results = [
             _finalize(
                 self._history_result(gh[i], sh[i]),
@@ -1241,8 +1448,7 @@ class SearchEngine:
             )
             for i, r in enumerate(reqs)
         ]
-        self._cache_completed(plan, results)
-        return results
+        return PendingLaunch(plan=plan, results=results)
 
     def _request_seed_cdf(self, req: SearchRequest) -> np.ndarray:
         """One request's feasible-cell CDF for the direct seeder (host
@@ -1276,20 +1482,26 @@ class SearchEngine:
         return hit
 
     def _init_populations(self, packed, k_seed, feats, mask, place,
-                          tables=None):
+                          tables=None, defer=False):
         """Initial populations for every slot: provided ``init_genomes``
         are copied in (the GA donates its input; callers keep theirs),
         missing ones run the batched largest-workload rejection seeder —
         one program either way, and seed failures only raise for slots
         that actually needed seeding.  With ``direct_seed`` and stacked
         tables at hand, the rejection rounds are replaced by the direct
-        feasible-cell sampler (``_seed_direct``)."""
+        feasible-cell sampler (``_seed_direct``).
+
+        Returns ``(init, check)``: ``check`` is ``None`` when feasibility
+        was verified here, or (with ``defer``, all-seeded slots only) a
+        callable that syncs the counts and raises the identical
+        ``RuntimeError`` later — the pipelined dispatch path's way of
+        keeping the seeder's count array off the critical host path."""
         r0 = packed[0]
         P = int(r0.pop_size)
         needs = [r.init_genomes is None for r in packed]
         if not any(needs):
             init = jnp.stack([jnp.asarray(r.init_genomes) for r in packed])
-            return place(init, pop_dim=1)
+            return place(init, pop_dim=1), None
         if self.direct_seed and tables is not None:
             cdf6 = place(self._stacked_seed_cdf(packed, r0.tech))
             pools, counts = _seed_direct_batched_jit(
@@ -1300,20 +1512,27 @@ class SearchEngine:
                 k_seed, feats, mask,
                 pop_size=P, oversample=64, max_rounds=8, tech=r0.tech,
             )
-        counts = np.asarray(counts)
-        for i, (r, need) in enumerate(zip(packed, needs)):
-            if need and counts[i] < P:
-                raise RuntimeError(
-                    f"could not seed {P} valid designs for request {i} "
-                    f"(workloads {r.ws.names}; {int(counts[i])} found)"
-                )
+
+        def check(counts=counts):
+            c = self._sync(counts)
+            for i, (r, need) in enumerate(zip(packed, needs)):
+                if need and c[i] < P:
+                    raise RuntimeError(
+                        f"could not seed {P} valid designs for request {i} "
+                        f"(workloads {r.ws.names}; {int(c[i])} found)"
+                    )
+
         if all(needs):
-            return place(pools, pop_dim=1)
+            if defer:
+                return place(pools, pop_dim=1), check
+            check()
+            return place(pools, pop_dim=1), None
+        check()  # the override merge below syncs the pools anyway
         pools = np.array(pools)  # writable host copy for the overrides
         for i, r in enumerate(packed):
             if r.init_genomes is not None:
                 pools[i] = np.asarray(r.init_genomes)
-        return place(jnp.asarray(pools), pop_dim=1)
+        return place(jnp.asarray(pools), pop_dim=1), None
 
 
 _DEFAULT_ENGINE: Optional[SearchEngine] = None

@@ -100,6 +100,21 @@ class GAState(NamedTuple):
     gen: jnp.ndarray  # () int32, generations completed so far
 
 
+class GAThin(NamedTuple):
+    """The transfer-thin GA result: what the pipelined engine syncs to
+    host instead of the full (G+1, P, n) history.  ``top_genomes`` /
+    ``top_scores`` hold the best ``min(top_k, (G+1)*P)`` UNIQUE designs
+    (uniqueness in decoded-grid-cell space, exactly like the host
+    ``engine._top_unique``) best-first; slots past ``n_kept`` are padding
+    (genome 0, score +inf).  ``convergence`` is the monotone best-so-far
+    curve over generations.  Batched variants carry a leading (B,) axis."""
+
+    top_genomes: jnp.ndarray  # (K, n) best-first unique designs
+    top_scores: jnp.ndarray  # (K,)
+    n_kept: jnp.ndarray  # () int32, valid entries in top_*
+    convergence: jnp.ndarray  # (G+1,) running best score
+
+
 class _IgnoreCtx:
     """Adapt a ctx-less ``eval_fn(genomes)`` to the internal
     ``eval_fn(genomes, ctx)`` convention.  Hash/eq delegate to the wrapped
@@ -586,4 +601,163 @@ def run_ga_batched_segment(
         seg_gens=int(generations), total_gens=int(total_generations),
         sbx_prob=float(sbx_prob), sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
         fused=bool(default_fused() if fused is None else fused),
+    )
+
+
+# ------------------------------------------------------- thin epilogue
+def _thin_epilogue(genomes_hist, scores_hist, top_k: int) -> GAThin:
+    """In-jit top-k-unique + convergence over one slot's full history.
+
+    Replicates the host finalize (``engine._top_unique`` semantics) ON
+    DEVICE so the pipelined engine only syncs (K, n) genomes, (K,) scores
+    and the (G+1,) convergence curve instead of the whole history.  The
+    selection must be BIT-identical to the host path, which is:
+
+      stable argsort by score -> first occurrence per decoded-grid-cell
+      class -> classes ordered by that first occurrence -> finite filter
+      -> truncate to k.
+
+    Step by step:
+      * key every design with the sign-folded total-order sort bits from
+        ``_survivor_indices`` — for finite and +/-inf scores ascending
+        (key, flat index) order IS numpy's stable score argsort (both
+        zero signs collapse to 0 there too), and non-finite designs are
+        masked out up front: a decoded cell evaluates to ONE score, so
+        NaN/inf classes are wholly non-finite and dropped by the finite
+        filter on both paths — pre-masking them changes nothing the
+        selection ever reads.
+      * ``top_k`` rounds of masked ``argmin`` (a ``fori_loop``; XLA's
+        variadic comparator sorts are an order of magnitude slower on
+        CPU than k vectorized min-reductions): ``jnp.argmin`` returns
+        the FIRST index attaining the minimum, i.e. exactly the stable
+        tie-break, so each round yields the best-ranked design whose
+        grid cell has not been seen — and overwriting the key of every
+        design decoding to that cell with the sentinel afterwards
+        replays the host's first-occurrence-per-class dedup in rank
+        order (the key array doubles as the mask: non-finite designs
+        start at the sentinel).  Cells compare as 1-2 mixed-radix int32
+        codes over the decoded index columns — the host's single int64
+        code is unavailable in-jit without global x64 (SPACE_SIZE
+        overflows int32 at grid density >= 2), so columns are packed
+        greedily while the radix product fits.
+      * ``n_kept`` counts the rounds that found a fresh finite class,
+        i.e. ``min(#unique finite classes, top_k)`` — all any consumer
+        reads.
+
+    Padding rows (beyond ``n_kept``) are genome 0 / score +inf; the host
+    slices them off before they reach a ``SearchResult``."""
+    G1, P, n = genomes_hist.shape
+    N = G1 * P
+    flat_g = genomes_hist.reshape(N, n)
+    flat_s = scores_hist.reshape(N)
+    bits = jax.lax.bitcast_convert_type(flat_s.astype(jnp.float32), jnp.int32)
+    fold = jnp.where(bits < 0, -(bits & jnp.int32(0x7FFFFFFF)), bits)
+    idx = space.decode_indices(flat_g)  # (N, n) int32 grid cells
+    # pack the cell columns into as few int32 codes as the grid permits
+    # (trace-time constants; configure_grid clears jit caches on change)
+    sizes = [len(space.SPACE[f]) for f in space.FIELDS]
+    codes, grp, prod = [], None, 1
+    for j in range(n):
+        if grp is None or prod * sizes[j] > 0x7FFFFFFF:
+            grp, prod = jnp.int32(0), 1
+            codes.append(None)
+        grp = grp * jnp.int32(sizes[j]) + idx[:, j]
+        prod *= sizes[j]
+        codes[-1] = grp
+    k = min(int(top_k), N)
+    sentinel = jnp.int32(0x7FFFFFFF)  # > every folded finite/inf key
+
+    def pick(i, carry):
+        okey, top_g, top_s, cnt = carry
+        j = jnp.argmin(okey)
+        valid = okey[j] < sentinel
+        top_g = top_g.at[i].set(jnp.where(valid, flat_g[j], jnp.float32(0.0)))
+        top_s = top_s.at[i].set(jnp.where(valid, flat_s[j], jnp.float32(jnp.inf)))
+        same = codes[0] == codes[0][j]
+        for c in codes[1:]:
+            same = same & (c == c[j])
+        okey = jnp.where(same, sentinel, okey)
+        return okey, top_g, top_s, cnt + valid.astype(jnp.int32)
+
+    _, top_g, top_s, n_kept = jax.lax.fori_loop(0, k, pick, (
+        jnp.where(jnp.isfinite(flat_s), fold, sentinel),
+        jnp.zeros((k, n), flat_g.dtype),
+        jnp.full((k,), jnp.inf, jnp.float32),
+        jnp.int32(0),
+    ))
+    conv = jax.lax.cummin(jnp.min(scores_hist, axis=1))
+    return GAThin(top_genomes=top_g, top_scores=top_s, n_kept=n_kept,
+                  convergence=conv)
+
+
+@partial(jax.jit, static_argnames=_GA_STATICS + ("top_k",),
+         donate_argnames=("init_genomes",))
+def _run_ga_batched_thin_jit(keys, init_genomes, ctx, *, eval_fn, pop_size,
+                             generations, sbx_prob, sbx_eta, mut_eta, fused,
+                             top_k):
+    def one(key, init, c):
+        ga = _ga_core(key, eval_fn, pop_size, generations, init, c,
+                      sbx_prob, sbx_eta, mut_eta, fused)
+        return _thin_epilogue(ga.genomes, ga.scores, top_k)
+
+    ctx_axes = jax.tree_util.tree_map(lambda _: 0, ctx)
+    return jax.vmap(one, in_axes=(0, 0, ctx_axes))(keys, init_genomes, ctx)
+
+
+@partial(jax.jit, static_argnames=("top_k",))
+def _epilogue_batched_jit(genomes_hist, scores_hist, *, top_k):
+    return jax.vmap(
+        lambda g, s: _thin_epilogue(g, s, top_k)
+    )(genomes_hist, scores_hist)
+
+
+def run_ga_batched_thin(
+    keys: jnp.ndarray,
+    eval_fn: Callable,
+    *,
+    pop_size: int,
+    generations: int,
+    init_genomes: jnp.ndarray,
+    top_k: int,
+    ctx: Any = None,
+    sbx_prob: float = SBX_PROB,
+    sbx_eta: float = SBX_ETA,
+    mut_eta: float = MUT_ETA,
+    fused: Optional[bool] = None,
+) -> GAThin:
+    """``run_ga_batched`` with the thin epilogue fused onto the SAME
+    program: one donated jit runs B GAs and reduces each full history to
+    its ``GAThin`` on device, so the host never transfers the (B, G+1,
+    P, n) history.  The selected designs/scores/convergence are
+    bit-identical to finalizing ``run_ga_batched``'s history on host
+    (tests/test_pipelined.py).  The history itself is unavailable —
+    callers that need ``GAResult`` (result-cache writes, fault partials)
+    must use the history path."""
+    if ctx is None and not isinstance(eval_fn, _IgnoreCtx):
+        eval_fn = _IgnoreCtx(eval_fn)
+    with warnings.catch_warnings():
+        # the thin outputs are far smaller than the donated seed buffer
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        return _run_ga_batched_thin_jit(
+            keys, init_genomes, ctx,
+            eval_fn=eval_fn, pop_size=int(pop_size),
+            generations=int(generations), sbx_prob=float(sbx_prob),
+            sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
+            fused=bool(default_fused() if fused is None else fused),
+            top_k=int(top_k),
+        )
+
+
+def ga_epilogue_batched(
+    genomes_hist: jnp.ndarray, scores_hist: jnp.ndarray, *, top_k: int,
+) -> GAThin:
+    """Standalone batched thin epilogue over accumulated histories
+    ((B, G+1, P, n) / (B, G+1, P), host or device): what the segmented
+    engine runs on its device-resident history to build streaming
+    snapshots and the final result without syncing the history itself."""
+    return _epilogue_batched_jit(
+        jnp.asarray(genomes_hist), jnp.asarray(scores_hist),
+        top_k=int(top_k),
     )

@@ -51,6 +51,15 @@ result instead of dropping them:
     python -m repro.launch.search --serve 64 --backend table \
         --segment-gens 2 --retry-attempts 3 --partial-results
 
+``--pipelined`` turns on transfer-thin pipelined execution: the GA
+program computes its own top-k epilogue on device (only the per-request
+top-k genomes/scores and the convergence curve cross the wire;
+``result.ga`` is ``None``) and, under ``--serve``, the drain
+double-buffers launches — dispatch plan i+1, then harvest plan i — so
+host finalize overlaps device compute.  Results are bit-identical; the
+summary prints the dispatch->harvest gap, device-idle estimate and
+harvested bytes next to the cache hit rate.
+
 ``--result-cache DIR`` arms the fingerprint-keyed result cache
 (``serve.cache.ResultCache``, disk tier under DIR): a request whose
 ``request_key`` was answered before — this process or any earlier one
@@ -124,6 +133,7 @@ def build_engine(args, mesh, result_cache=None):
         segment_retries=args.segment_retries,
         checkpoint_dir=args.checkpoint_dir or None,
         result_cache=result_cache,
+        pipelined=args.pipelined,
     )
 
 
@@ -171,7 +181,8 @@ def serve(args, ws: WorkloadSet, mesh) -> int:
                             backoff_s=args.retry_backoff)
     svc_kw = dict(engine=engine, mesh=mesh, policy=args.serve_policy,
                   retry=retry, partial_results=args.partial_results,
-                  result_cache=cache)
+                  result_cache=cache,
+                  pipelined=args.pipelined or None)
     mix_kw = {}
     if args.serve_policy == "priority":
         mix_kw["priorities"] = [3, 0, 1, 2]
@@ -233,6 +244,13 @@ def serve(args, ws: WorkloadSet, mesh) -> int:
           f"{stats.deadline_misses} deadline misses)")
     print(f"[serve] faults: {stats.failures} failures, {stats.retries} "
           f"retries, {stats.partials} partials, {stats.abandoned} abandoned")
+    eng = svc.service.engine if args.serve_async else svc.engine
+    print(f"[serve] overlap: pipelined={'on' if args.pipelined else 'off'}, "
+          f"dispatch->harvest gap p50 "
+          f"{_fmt(stats.dispatch_gap_p(50), '.4f')}s, device idle "
+          f"{stats.device_idle_s:.3f}s, "
+          f"{getattr(eng, 'transfer_bytes', 0)} bytes harvested over "
+          f"{getattr(eng, 'launches', 0)} engine launches")
     if cache is not None:
         print(f"[serve] cache: {stats.cache_hits} submit hits / "
               f"{stats.cache_misses} misses this drain "
@@ -294,6 +312,14 @@ def main(argv=None) -> int:
         "--serve-async", action="store_true",
         help="drain --serve through the threaded AsyncDSEService front "
              "end (submit returns futures) instead of the sync queue",
+    )
+    ap.add_argument(
+        "--pipelined", action="store_true",
+        help="transfer-thin pipelined execution: on-device top-k epilogue "
+             "(only (top_k, n) genomes + scores + the convergence curve "
+             "cross the wire; result.ga is None) and, under --serve, a "
+             "double-buffered dispatch/harvest drain that overlaps host "
+             "finalize with device compute — bit-identical results",
     )
     ap.add_argument(
         "--segment-gens", type=int, default=0, metavar="K",
@@ -371,6 +397,7 @@ def main(argv=None) -> int:
         objective=args.objective, area_constr=args.area,
         pop_size=args.pop, generations=args.gens,
         mesh=mesh, backend=args.backend, engine=engine,
+        pipelined=args.pipelined or None,
     )
     dt_all = time.time() - t0
     n_evald = args.seeds * args.pop * (args.gens + 1)
@@ -399,6 +426,7 @@ def main(argv=None) -> int:
                 objective=args.objective, area_constr=args.area,
                 pop_size=args.pop, generations=args.gens,
                 mesh=mesh, backend=args.backend, engine=engine,
+                pipelined=args.pipelined or None,
             )
             cross = {}
             for name, r in sep.items():

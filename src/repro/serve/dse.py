@@ -126,6 +126,15 @@ class ServiceStats:
     ``CacheStats.hit_rate()``, which additionally distinguishes the
     memory and disk tiers.
 
+    Launch-overlap telemetry (the pipelined drain's effectiveness):
+    ``dispatch_gap_samples`` records, per launch, how long the dispatched
+    device work waited before its harvest started (harvest start -
+    dispatch end; always 0 on the sequential path, where execute syncs
+    inline), and ``device_idle_s`` accumulates an ESTIMATE of wall time
+    with nothing in flight between one harvest finishing and the next
+    dispatch starting — the overlap win shows up as near-zero idle while
+    the gap stays small.
+
     Percentiles over empty sample windows are ``None`` (a fresh service
     has no telemetry) — never NaN, which is invalid JSON and poisons
     serialized bench rows."""
@@ -145,6 +154,9 @@ class ServiceStats:
         default_factory=lambda: deque(maxlen=SAMPLE_WINDOW))
     latency_samples: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=SAMPLE_WINDOW))
+    dispatch_gap_samples: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=SAMPLE_WINDOW))
+    device_idle_s: float = 0.0
 
     def requests_per_s(self) -> float:
         return self.completed / self.busy_s if self.busy_s > 0 else 0.0
@@ -165,6 +177,11 @@ class ServiceStats:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
 
+    def dispatch_gap_p(self, q: float) -> Optional[float]:
+        """Dispatch-end -> harvest-start gap percentile in seconds;
+        ``None`` before any launch was harvested."""
+        return _percentile(self.dispatch_gap_samples, q)
+
     def summary(self) -> Dict[str, Optional[float]]:
         return {
             "requests_per_s": self.requests_per_s(),
@@ -179,6 +196,8 @@ class ServiceStats:
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "cache_hit_rate": self.cache_hit_rate(),
+            "dispatch_gap_p50_s": self.dispatch_gap_p(50),
+            "device_idle_s": self.device_idle_s,
         }
 
 
@@ -255,6 +274,18 @@ class DSEService:
     bit-identical results.  When the engine was built by this service
     the cache is shared with it; an explicitly passed engine keeps its
     own ``result_cache`` (and the service adopts it if not given one).
+
+    ``pipelined=True`` drains multi-plan queues double-buffered: each
+    ``stream``/``drain`` iteration DISPATCHES plan i+1 (JAX async — the
+    device starts computing) before HARVESTING plan i (the host-blocking
+    finalize), so host packing of one launch overlaps device compute of
+    the next.  Results are bit-identical to the sequential drain — only
+    the launch interleaving changes — but results carry ``ga=None``
+    (transfer-thin; see ``SearchEngine``), so a shared result cache
+    stores cache-hits from sequential runs only.  The knob is inherited
+    from an explicitly passed engine's own ``pipelined`` flag when left
+    ``None``, and silently falls back to the sequential drain on engines
+    without the dispatch/harvest split (stubs, fault wrappers).
     """
 
     def __init__(
@@ -269,9 +300,23 @@ class DSEService:
         partial_results: bool = False,
         sleep=None,
         result_cache=None,
+        pipelined: Optional[bool] = None,
     ):
         self.engine = engine or SearchEngine(mesh=mesh, max_slots=max_slots,
-                                             result_cache=result_cache)
+                                             result_cache=result_cache,
+                                             pipelined=bool(pipelined))
+        if pipelined is None:
+            self.pipelined = bool(getattr(self.engine, "pipelined", False))
+        else:
+            self.pipelined = bool(pipelined)
+        # stub/wrapper engines (sim FakeEngine, fault injectors) have no
+        # dispatch/harvest split — they drain sequentially regardless
+        self._can_pipeline = (hasattr(self.engine, "dispatch")
+                              and hasattr(self.engine, "harvest"))
+        # overlap telemetry: launches currently dispatched-not-harvested,
+        # and when the device last went quiet (None = never launched)
+        self._inflight = 0
+        self._last_harvest_end: Optional[float] = None
         self.result_cache = (
             result_cache if result_cache is not None
             else getattr(self.engine, "result_cache", None)
@@ -606,6 +651,8 @@ class DSEService:
         if d is None:
             return swept
         plan, rids, t0 = d
+        if self._last_harvest_end is not None:
+            self.stats.device_idle_s += max(0.0, t0 - self._last_harvest_end)
         try:
             results = self.engine.execute(plan, **self._progress_kw(rids))
         except Exception as e:
@@ -619,8 +666,11 @@ class DSEService:
             # the kill half of the kill/resume contract
             self._rollback(plan, rids)
             raise
-        return swept + self._complete(rids, results, self.clock() - t0,
-                                      plan.requests)
+        te = self.clock()
+        # sequential execute harvests inline: the gap is 0 by definition
+        self.stats.dispatch_gap_samples.append(0.0)
+        self._last_harvest_end = te
+        return swept + self._complete(rids, results, te - t0, plan.requests)
 
     def _wait_for_retries(self) -> None:
         """Nothing dispatchable but retries are backed off: sleep the
@@ -631,10 +681,107 @@ class DSEService:
             if dt > 0:
                 self._sleep(dt)
 
+    def _harvest_one(
+        self, entry: Tuple[BatchPlan, List[int], float, object, float]
+    ) -> List[Tuple[int, SearchResult]]:
+        """Harvest one in-flight launch ``(plan, rids, t0, pending, td)``:
+        blocks on the device sync, records the dispatch->harvest gap, and
+        completes (or fails, mirroring ``step()``'s fault handling) the
+        launch's requests.  ``busy_s`` gets the HOST time only (dispatch +
+        harvest walls) — the overlapped in-flight window is exactly what
+        the pipelined drain does not spend blocked."""
+        plan, rids, t0, pend, td = entry
+        th = self.clock()
+        try:
+            results = self.engine.harvest(pend)
+        except Exception as e:
+            self._inflight -= 1
+            if self._inflight == 0:
+                self._last_harvest_end = self.clock()
+            if self.retry is None:
+                self._rollback(plan, rids)
+                raise
+            resolutions, _ = self._handle_failure(plan, rids, e)
+            return resolutions
+        except BaseException:
+            self._inflight -= 1
+            self._rollback(plan, rids)
+            raise
+        te = self.clock()
+        self.stats.dispatch_gap_samples.append(max(0.0, th - td))
+        self._inflight -= 1
+        if self._inflight == 0:
+            self._last_harvest_end = te
+        return self._complete(rids, results, (td - t0) + (te - th),
+                              plan.requests)
+
+    def _stream_pipelined(self) -> Iterator[Tuple[int, SearchResult]]:
+        """Double-buffered drain: dispatch plan i+1, THEN harvest plan i,
+        so the host-side finalize of one launch overlaps device compute
+        of the next.  At most one launch is in flight beyond the one
+        being harvested; any exception rolls the in-flight launch's
+        requests back into the queue before propagating."""
+        prev = None  # (plan, rids, t0, pending, td) still in flight
+        try:
+            while True:
+                swept = (self._sweep_deadlines()
+                         if self.partial_results else [])
+                yield from swept
+                d = self._dispatch()
+                if d is None:
+                    if prev is not None:
+                        to_harvest, prev = prev, None
+                        yield from self._harvest_one(to_harvest)
+                        continue
+                    if not self.pending():
+                        return
+                    self._wait_for_retries()
+                    continue
+                plan, rids, t0 = d
+                if self._inflight == 0 and self._last_harvest_end is not None:
+                    self.stats.device_idle_s += max(
+                        0.0, t0 - self._last_harvest_end)
+                try:
+                    pend = self.engine.dispatch(
+                        plan, **self._progress_kw(rids))
+                except Exception as e:
+                    # a failed dispatch resolves like a failed launch; the
+                    # in-flight prev is untouched and harvests next round
+                    if self.retry is None:
+                        self._rollback(plan, rids)
+                        raise
+                    resolutions, _ = self._handle_failure(plan, rids, e)
+                    yield from resolutions
+                    continue
+                except BaseException:
+                    self._rollback(plan, rids)
+                    raise
+                td = self.clock()
+                self._inflight += 1
+                cur = (plan, rids, t0, pend, td)
+                if prev is not None:
+                    # swap BEFORE harvesting: if the harvest raises, the
+                    # outer handler rolls back cur (prev already rolled
+                    # back inside _harvest_one), never double-rolls
+                    to_harvest, prev = prev, cur
+                    yield from self._harvest_one(to_harvest)
+                else:
+                    prev = cur
+        except BaseException:
+            if prev is not None:
+                self._inflight -= 1
+                self._rollback(prev[0], prev[1])
+            raise
+
     def stream(self) -> Iterator[Tuple[int, SearchResult]]:
         """Drain, yielding each plan's results as soon as its launch
         finishes — callers overlap their own post-processing with the
-        remaining launches."""
+        remaining launches.  Under ``pipelined=True`` (on an engine with
+        the dispatch/harvest split) the drain double-buffers launches;
+        same results, same per-plan yield boundaries."""
+        if self.pipelined and self._can_pipeline:
+            yield from self._stream_pipelined()
+            return
         while self.pending():
             out = self.step()
             yield from out
@@ -670,7 +817,10 @@ class AsyncDSEService:
     for reacting mid-drain (the integration test submits its priority-0
     jump there).  ``paused=True`` admits submissions without launching
     until ``resume()`` — batch admission with a deterministic first plan.
-    Use as a context manager, or call ``close()``."""
+    ``pipelined=True`` swaps the worker for a double-buffered loop
+    (dispatch plan i+1 before harvesting plan i — see ``DSEService``);
+    results and future-resolution order are unchanged.  Use as a context
+    manager, or call ``close()``."""
 
     def __init__(
         self,
@@ -684,11 +834,12 @@ class AsyncDSEService:
         retry: Optional[RetryPolicy] = None,
         partial_results: bool = False,
         result_cache=None,
+        pipelined: Optional[bool] = None,
     ):
         self.service = DSEService(
             engine=engine, mesh=mesh, max_slots=max_slots, policy=policy,
             clock=clock, retry=retry, partial_results=partial_results,
-            result_cache=result_cache,
+            result_cache=result_cache, pipelined=pipelined,
         )
         self._lock = threading.Lock()
         self._wake = threading.Event()
@@ -699,8 +850,11 @@ class AsyncDSEService:
             self._run.set()
         self._futures: Dict[int, Future] = {}
         self._closed = False
+        svc = self.service
+        target = (self._loop_pipelined
+                  if svc.pipelined and svc._can_pipeline else self._loop)
         self._worker = threading.Thread(
-            target=self._loop, name="dse-service", daemon=True
+            target=target, name="dse-service", daemon=True
         )
         self._worker.start()
 
@@ -821,6 +975,135 @@ class AsyncDSEService:
             for f, res in futs:
                 if f is not None:
                     f.set_result(res)
+
+    def _loop_pipelined(self):
+        """The double-buffered worker: dispatch plan i+1 (lock-free — the
+        device starts computing), then harvest plan i (the blocking sync).
+        Queue surgery and stats stay under the lock exactly as in
+        ``_loop``; futures always resolve outside it.  ``pause()`` and
+        ``close()`` both finish the in-flight launch before stopping."""
+        svc = self.service
+
+        def fail_rids(plan, rids, e):
+            """Failure bookkeeping shared by dispatch and harvest faults
+            (the async twin of step()'s except-arm): returns the futures
+            to resolve/fail, computed under the lock."""
+            if svc.retry is None:
+                svc._abandon(rids)
+                resolved = []
+                failed = [self._futures.pop(rid, None) for rid in rids]
+            else:
+                res2, bad = svc._handle_failure(plan, rids, e)
+                resolved = [(self._futures.pop(rid, None), r)
+                            for rid, r in res2]
+                failed = [self._futures.pop(rid, None) for rid in bad]
+            return resolved, failed
+
+        def harvest_entry(entry):
+            plan, rids, t0, pend, td = entry
+            th = svc.clock()
+            try:
+                results = svc.engine.harvest(pend)
+            except BaseException as e:  # noqa: BLE001 — fail the futures, keep serving
+                with self._lock:
+                    svc._inflight -= 1
+                    if svc._inflight == 0:
+                        svc._last_harvest_end = svc.clock()
+                    resolved, failed = fail_rids(plan, rids, e)
+                for f, r in resolved:
+                    if f is not None:
+                        f.set_result(r)
+                for f in failed:
+                    if f is not None:
+                        f.set_exception(e)
+                return
+            te = svc.clock()
+            with self._lock:
+                svc.stats.dispatch_gap_samples.append(max(0.0, th - td))
+                svc._inflight -= 1
+                if svc._inflight == 0:
+                    svc._last_harvest_end = te
+                done = svc._complete(rids, results, (td - t0) + (te - th),
+                                     plan.requests)
+                futs = [(self._futures.pop(rid, None), r) for rid, r in done]
+            for f, r in futs:
+                if f is not None:
+                    f.set_result(r)
+
+        prev = None  # (plan, rids, t0, pending, td) still in flight
+        while True:
+            if prev is None:
+                self._wake.wait()
+                self._run.wait()
+            elif not self._run.is_set():
+                # paused mid-overlap: settle the in-flight launch, then
+                # block at the top of the next iteration
+                to_harvest, prev = prev, None
+                harvest_entry(to_harvest)
+                continue
+            retry_wait = None
+            d = None
+            with self._lock:
+                if self._closed:
+                    break
+                swept = (svc._sweep_deadlines()
+                         if svc.partial_results else [])
+                partial_futs = [
+                    (self._futures.pop(rid, None), res) for rid, res in swept
+                ]
+                d = svc._dispatch()
+                if d is None:
+                    nb = svc._next_retry_due()
+                    if nb is None and prev is None:
+                        self._wake.clear()
+                        if not self._futures:
+                            self._idle.set()
+                    elif nb is not None:
+                        retry_wait = max(nb - svc.clock(), 0.0)
+                else:
+                    plan, rids, t0 = d
+                    if (svc._inflight == 0
+                            and svc._last_harvest_end is not None):
+                        svc.stats.device_idle_s += max(
+                            0.0, t0 - svc._last_harvest_end)
+            for f, res in partial_futs:
+                if f is not None:
+                    f.set_result(res)
+            if d is None:
+                if prev is not None:
+                    to_harvest, prev = prev, None
+                    harvest_entry(to_harvest)
+                elif retry_wait is not None:
+                    time.sleep(min(retry_wait, 0.05) or 0.001)
+                continue
+            # dispatch WITHOUT the lock: it only enqueues device work
+            # (progress callbacks fire here too, and may submit)
+            try:
+                pend = svc.engine.dispatch(plan, **svc._progress_kw(rids))
+            except BaseException as e:  # noqa: BLE001 — fail the futures, keep serving
+                with self._lock:
+                    resolved, failed = fail_rids(plan, rids, e)
+                for f, r in resolved:
+                    if f is not None:
+                        f.set_result(r)
+                for f in failed:
+                    if f is not None:
+                        f.set_exception(e)
+                continue
+            td = svc.clock()
+            with self._lock:
+                svc._inflight += 1
+            cur = (plan, rids, t0, pend, td)
+            if prev is not None:
+                to_harvest, prev = prev, cur
+                harvest_entry(to_harvest)
+            else:
+                prev = cur
+        # closed with a launch still in flight (timed-out close cancelled
+        # its futures): settle it so engine bookkeeping stays consistent —
+        # the pops above see an empty future map and skip
+        if prev is not None:
+            harvest_entry(prev)
 
     def drain(self, timeout: Optional[float] = None) -> Dict[int, SearchResult]:
         """Block until the queue and all in-flight launches are done;

@@ -1,0 +1,459 @@
+"""Pipelined engine: transfer-thin epilogue + overlapped dispatch/harvest.
+
+The contract this module pins (ISSUE 9, perf_opt PR):
+
+  * **Bit-parity** — ``pipelined=True`` execution (on-device top-k-unique
+    epilogue, only (top_k, n) genomes + (top_k,) scores + the convergence
+    curve cross the wire) reproduces the sequential history-syncing path
+    bit-for-bit: every result field except ``ga`` (``None`` when thin —
+    the history never reaches host), on every backend, odd populations,
+    ragged mixed-subset multi-chunk batches, segmented chains, streaming
+    snapshots, fault partials, checkpoints, and the fake-8-device mesh.
+  * **Epilogue semantics** — the in-jit epilogue matches the host
+    ``_top_unique`` exactly, pinned adversarially on duplicate decoded
+    cells, +/-inf scores, and -0.0/+0.0 ties.
+  * **No stray syncs** — the warm pipelined segmented loop never blocks
+    on a device->host array transfer (the old per-segment
+    ``int(np.asarray(state.gen))`` regression), and the harvested bytes
+    are >= 10x smaller than the history-syncing path's.
+  * **Service drain** — ``DSEService(pipelined=True)`` (sync and async)
+    double-buffers dispatch/harvest with unchanged results, yield order
+    and launch count.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as engine_mod
+from repro.core import space
+from repro.core.engine import (
+    EngineFault,
+    SearchEngine,
+    SearchRequest,
+    _top_unique,
+    plan_batch,
+)
+from repro.core.ga import ga_epilogue_batched
+from repro.core.search import batched_search, run_search
+from repro.serve.dse import AsyncDSEService, DSEService, paper_request_mix
+from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+from repro.workloads.pack import pack_workloads
+
+POP, GENS = 14, 5
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+
+
+def _same_thin(thin, full):
+    """A pipelined result equals its sequential twin on every field the
+    thin path carries; ``ga`` is ``None`` by contract (history on device)."""
+    assert thin.ga is None and full.ga is not None
+    np.testing.assert_array_equal(thin.top_scores, full.top_scores)
+    np.testing.assert_array_equal(thin.top_genomes, full.top_genomes)
+    assert thin.top_designs == full.top_designs
+    np.testing.assert_array_equal(thin.convergence, full.convergence)
+    assert thin.valid == full.valid
+    assert thin.generations == full.generations
+    assert thin.objective == full.objective
+    assert thin.workload_names == full.workload_names
+
+
+def _reqs(ws, n, *, backend="table", gens=GENS, seed0=0, top_ks=(3, 7)):
+    subsets = [[0, 1, 2, 3], [0], [1, 2]]
+    return [
+        SearchRequest(ws=ws.subset(subsets[i % 3]), seed=seed0 + i,
+                      backend=backend, pop_size=POP, generations=gens,
+                      top_k=top_ks[i % len(top_ks)])
+        for i in range(n)
+    ]
+
+
+# ------------------------------------------------------------ basic parity
+@pytest.mark.parametrize("backend", ["jnp", "table", "pallas"])
+def test_pipelined_sequential_parity_all_backends(ws, backend):
+    key = jax.random.PRNGKey(11)
+    a = run_search(key, ws, pop_size=16, generations=4, backend=backend,
+                   pipelined=True)
+    b = run_search(key, ws, pop_size=16, generations=4, backend=backend,
+                   pipelined=False)
+    _same_thin(a, b)
+
+
+@pytest.mark.parametrize("pop", [15, 17])
+def test_pipelined_parity_odd_pop(ws, pop):
+    key = jax.random.PRNGKey(5)
+    a = run_search(key, ws, pop_size=pop, generations=3, backend="table",
+                   top_k=7, pipelined=True)
+    b = run_search(key, ws, pop_size=pop, generations=3, backend="table",
+                   top_k=7, pipelined=False)
+    _same_thin(a, b)
+
+
+def test_pipelined_parity_ragged_multichunk_batch(ws):
+    """Mixed workload subsets + mixed top_k across MULTIPLE chunks (small
+    max_slots forces >1 launch): back-to-back dispatches then a harvest
+    pass must equal the launch-sync-launch reference per element."""
+    reqs = _reqs(ws, 5, seed0=100)
+    seq = SearchEngine(max_slots=2).run(reqs)
+    pip = SearchEngine(max_slots=2, pipelined=True)
+    out = pip.run(reqs)
+    assert pip.launches >= 3  # 5 requests over 2 slots = 3 chunks
+    for a, b in zip(out, seq):
+        _same_thin(a, b)
+
+
+def test_pipelined_parity_ragged_batched_search(ws):
+    subsets = [[0], [1, 2], [0, 1, 2, 3]]
+    sets = [ws.subset(s) for s in subsets]
+    W = max(s.n for s in sets)
+    L = ws.feats.shape[1]
+    B = len(sets)
+    feats = np.zeros((B, W, L, 6), np.float32)
+    mask = np.zeros((B, W, L), bool)
+    for i, s in enumerate(sets):
+        feats[i, : s.n] = np.asarray(s.feats)
+        mask[i, : s.n] = np.asarray(s.mask)
+    keys = jnp.stack([jax.random.PRNGKey(100 + i) for i in range(B)])
+    ra = batched_search(keys, feats, mask, pop_size=12, generations=3,
+                        backend="table", pipelined=True)
+    rb = batched_search(keys, feats, mask, pop_size=12, generations=3,
+                        backend="table", pipelined=False)
+    for a, b in zip(ra, rb):
+        _same_thin(a, b)
+
+
+def test_pipelined_parity_segmented_chain(ws):
+    """Pipelined x segmented: the device-resident history chain + thin
+    final epilogue equals the sequential segmented engine AND the plain
+    single shot."""
+    reqs = _reqs(ws, 3, seed0=20)
+    single = SearchEngine().run(reqs)
+    out = SearchEngine(segment_gens=2, pipelined=True).run(reqs)
+    for a, b in zip(out, single):
+        _same_thin(a, b)
+
+
+def test_pipelined_fused_cross_parity(ws):
+    """pipelined x fused compose: both knobs on equals both knobs off."""
+    reqs = _reqs(ws, 2, seed0=30)
+    ref = SearchEngine(fused=False).run(reqs)
+    out = SearchEngine(fused=True, pipelined=True).run(reqs)
+    for a, b in zip(out, ref):
+        _same_thin(a, b)
+
+
+@pytest.mark.multidevice
+def test_pipelined_sharded_parity(ws):
+    from repro.launch.mesh import make_search_mesh
+
+    reqs = _reqs(ws, 4, seed0=40)
+    ref = SearchEngine().run(reqs)
+    eng = SearchEngine(mesh=make_search_mesh(2, 4), pipelined=True)
+    for a, b in zip(eng.run(reqs), ref):
+        _same_thin(a, b)
+
+
+# ---------------------------------------------------- epilogue adversarial
+def _epilogue_vs_host(genomes_hist, scores_hist, top_k):
+    """One batch slot through the thin epilogue vs the host reference."""
+    thin = ga_epilogue_batched(genomes_hist[None], scores_hist[None],
+                               top_k=top_k)
+    tg = np.asarray(thin.top_genomes[0])
+    ts = np.asarray(thin.top_scores[0])
+    kept = min(int(thin.n_kept[0]), top_k)
+    flat_g = genomes_hist.reshape(-1, genomes_hist.shape[-1])
+    flat_s = scores_hist.reshape(-1)
+    rg, rs = _top_unique(flat_g, flat_s, top_k)
+    assert kept == len(rs)
+    np.testing.assert_array_equal(ts[:kept], rs)
+    np.testing.assert_array_equal(tg[:kept], rg)
+    # convergence: running min of the per-generation minima
+    np.testing.assert_array_equal(
+        np.asarray(thin.convergence[0]),
+        np.minimum.accumulate(scores_hist.min(axis=1)),
+    )
+
+
+def test_epilogue_top_unique_adversarial_ties():
+    """Duplicate decoded cells, +/-inf, NaN, and -0.0/+0.0 ties: the
+    in-jit epilogue keeps exactly ``_top_unique``'s stable tie-break —
+    first (earliest flat index) occurrence of each unique decoded design
+    at its best score, non-finite dropped."""
+    rng = np.random.default_rng(0)
+    G, P = 4, 8
+    base = np.asarray(space.random_genomes(jax.random.PRNGKey(2), P))
+    g = np.tile(base[None], (G, 1, 1)).astype(np.float32)
+    # rows 0/1 of every generation decode to the SAME cell as each other
+    g[:, 1] = g[:, 0]
+    # a second occurrence of cell 0 with a DIFFERENT float genome (same
+    # decoded cell) — the signed-zero tie-break below picks one of the
+    # two visibly, via the returned genome row
+    g[1, 0] = np.clip(g[0, 0] + 1e-4, 0.0, 1.0).astype(np.float32)
+    assert np.array_equal(space.decode_indices_np(g[1, 0][None]),
+                          space.decode_indices_np(g[0, 0][None]))
+    s = (np.abs(rng.standard_normal((G, P))) + 1.0).astype(np.float32)
+    # cell 0's BEST score is a -0.0/+0.0 tie across two occurrences: the
+    # stable rule keeps the earliest flat index (gen 0's -0.0 genome)
+    s[0, 0] = -0.0
+    s[1, 0] = +0.0
+    # duplicated +inf occurrences and a NaN poke the non-finite drop
+    s[0, 3] = np.inf
+    s[1, 3] = np.inf
+    s[2, 5] = np.nan
+    _epilogue_vs_host(g, s, top_k=5)
+
+
+def test_epilogue_all_nonfinite_and_topk_over_n():
+    g = np.asarray(space.random_genomes(jax.random.PRNGKey(3), 4))
+    hist_g = np.tile(g[None], (2, 1, 1)).astype(np.float32)
+    hist_s = np.full((2, 4), np.inf, np.float32)
+    _epilogue_vs_host(hist_g, hist_s, top_k=3)
+    # top_k larger than the whole history: kept = #unique finite designs
+    hist_s2 = np.arange(8, dtype=np.float32).reshape(2, 4)
+    _epilogue_vs_host(hist_g, hist_s2, top_k=64)
+
+
+def test_epilogue_duplicate_scores_distinct_cells():
+    """Equal scores on DIFFERENT cells: both kept, history order."""
+    P = 6
+    g = np.asarray(space.random_genomes(jax.random.PRNGKey(4), P))
+    hist_g = g[None].astype(np.float32)
+    hist_s = np.zeros((1, P), np.float32)  # all tied
+    _epilogue_vs_host(hist_g, hist_s, top_k=P)
+
+
+def test_engine_invalid_when_all_infeasible(ws):
+    """A search whose every score is +inf finalizes thin as invalid —
+    same contract as the history path."""
+    req = SearchRequest(ws=ws, seed=0, backend="table", pop_size=POP,
+                        generations=2, area_constr=1e-9)
+    a = SearchEngine(pipelined=True).run([req])[0]
+    b = SearchEngine().run([req])[0]
+    assert not a.valid and not b.valid
+    assert a.top_scores.size == 0 and a.top_designs == []
+    np.testing.assert_array_equal(a.convergence, b.convergence)
+
+
+# ---------------------------------------------------------- streaming parity
+def test_pipelined_streaming_snapshot_parity(ws):
+    """on_progress snapshots through the thin epilogue equal the
+    history-finalized ones at every segment boundary."""
+    reqs = _reqs(ws, 2, seed0=50)
+
+    def run(pipelined):
+        snaps = []
+        eng = SearchEngine(segment_gens=2, pipelined=pipelined)
+        plan = plan_batch(reqs, max_slots=eng.max_slots)[0]
+        res = eng.execute(plan, on_progress=lambda i, s: snaps.append((i, s)))
+        return snaps, res
+
+    snaps_p, res_p = run(True)
+    snaps_s, res_s = run(False)
+    assert len(snaps_p) == len(snaps_s) > 0
+    for (ia, a), (ib, b) in zip(snaps_p, snaps_s):
+        assert ia == ib
+        assert a.partial and b.partial
+        np.testing.assert_array_equal(a.top_scores, b.top_scores)
+        np.testing.assert_array_equal(a.top_genomes, b.top_genomes)
+        np.testing.assert_array_equal(a.convergence, b.convergence)
+        assert a.generations == b.generations
+    for a, b in zip(res_p, res_s):
+        _same_thin(a, b)
+
+
+# ------------------------------------------------------- fault + checkpoint
+def test_pipelined_fault_partials_parity(ws, monkeypatch):
+    """Exhausted retries raise ``EngineFault`` whose anytime partials are
+    identical under both modes (the thin path syncs the device history at
+    the fault boundary)."""
+    reqs = _reqs(ws, 2, seed0=60)
+    real = engine_mod.run_ga_batched_segment
+    calls = {"n": 0}
+
+    def fails_from_second(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] % 10 >= 2:  # per-engine counter below resets decade
+            raise RuntimeError("injected permanent failure")
+        return real(*a, **kw)
+
+    def fault_partials(pipelined):
+        calls["n"] = (calls["n"] // 10 + 1) * 10
+        eng = SearchEngine(segment_gens=2, segment_retries=0,
+                           pipelined=pipelined)
+        with pytest.raises(EngineFault) as ei:
+            eng.run(reqs)
+        return ei.value
+
+    monkeypatch.setattr(engine_mod, "run_ga_batched_segment",
+                        fails_from_second)
+    fp = fault_partials(True)
+    fs = fault_partials(False)
+    assert fp.generations_done == fs.generations_done == 2
+    assert len(fp.partials) == len(fs.partials) == len(reqs)
+    for a, b in zip(fp.partials, fs.partials):
+        assert a.partial and b.partial
+        np.testing.assert_array_equal(a.top_scores, b.top_scores)
+        np.testing.assert_array_equal(a.top_genomes, b.top_genomes)
+        np.testing.assert_array_equal(a.convergence, b.convergence)
+        assert a.generations == b.generations == 2
+
+
+def test_pipelined_checkpoint_cross_mode_resume(ws, tmp_path, monkeypatch):
+    """Checkpoints written by a killed PIPELINED run restore into a
+    SEQUENTIAL engine (and vice versa) and finish bit-identical to an
+    uninterrupted run — the on-disk state is mode-agnostic host numpy."""
+    from repro.checkpoint import store
+
+    reqs = _reqs(ws, 2, seed0=70)
+    ref = SearchEngine(segment_gens=2).run(reqs)
+    real = engine_mod.run_ga_batched_segment
+
+    def drill(kill_pipelined, resume_pipelined, sub):
+        ck_root = tmp_path / sub
+        calls = {"n": 0}
+
+        def killed_on_second(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise KeyboardInterrupt()
+            return real(*a, **kw)
+
+        monkeypatch.setattr(engine_mod, "run_ga_batched_segment",
+                            killed_on_second)
+        eng = SearchEngine(segment_gens=2, checkpoint_dir=str(ck_root),
+                           pipelined=kill_pipelined)
+        with pytest.raises(KeyboardInterrupt):
+            eng.run(reqs)
+        monkeypatch.setattr(engine_mod, "run_ga_batched_segment", real)
+        ck = ck_root / engine_mod.plan_key(
+            plan_batch(reqs, max_slots=eng.max_slots)[0])
+        assert store.latest_step(ck) == 2  # segment 1 committed pre-kill
+        out = SearchEngine(segment_gens=2, checkpoint_dir=str(ck_root),
+                           pipelined=resume_pipelined).run(reqs)
+        assert store.latest_step(ck) is None
+        return out
+
+    for a, b in zip(drill(True, False, "p2s"), ref):
+        np.testing.assert_array_equal(a.top_scores, b.top_scores)
+        np.testing.assert_array_equal(a.top_genomes, b.top_genomes)
+        assert a.ga is not None  # sequential resume keeps the history
+    for a, b in zip(drill(False, True, "s2p"), ref):
+        _same_thin(a, b)
+
+
+# --------------------------------------------------------- sync regression
+def test_warm_pipelined_segmented_loop_never_syncs(ws, monkeypatch):
+    """Satellite regression: once the first segment launches, the warm
+    pipelined loop performs NO device->host array conversion — neither
+    the old per-segment ``int(np.asarray(state.gen))`` counter sync nor
+    per-segment history materialization.  The recorder arms at the first
+    segment call and every ``np.asarray`` over a jax array from then to
+    the end of ``dispatch`` is a regression."""
+    reqs = _reqs(ws, 2, seed0=90)
+    SearchEngine(segment_gens=2, pipelined=True).run(reqs)  # warm caches
+    eng = SearchEngine(segment_gens=2, pipelined=True)
+    plan = plan_batch(reqs, max_slots=eng.max_slots)[0]
+
+    real_asarray = np.asarray
+    rec = {"armed": False, "synced": []}
+
+    def recording(a, *args, **kw):
+        if rec["armed"] and isinstance(a, jax.Array):
+            rec["synced"].append((tuple(a.shape), str(a.dtype)))
+        return real_asarray(a, *args, **kw)
+
+    real_seg = engine_mod.run_ga_batched_segment
+
+    def arming(*a, **kw):
+        rec["armed"] = True
+        return real_seg(*a, **kw)
+
+    monkeypatch.setattr(engine_mod, "run_ga_batched_segment", arming)
+    monkeypatch.setattr(np, "asarray", recording)
+    try:
+        pending = eng.dispatch(plan)
+        in_loop = list(rec["synced"])
+        results = eng.harvest(pending)
+    finally:
+        monkeypatch.setattr(np, "asarray", real_asarray)
+    assert in_loop == [], f"warm segmented loop synced: {in_loop}"
+    # control: the recorder is live — harvest DID sync the thin fields
+    assert len(rec["synced"]) > len(in_loop)
+    assert all(r.generations == GENS for r in results)
+
+
+def test_transfer_bytes_reduction_and_launch_count(ws):
+    """The harvested-bytes telemetry: the thin path moves >= 10x fewer
+    bytes than the history path for the same plan chunks, with the same
+    launch count."""
+    reqs = _reqs(ws, 5, seed0=110, gens=8)
+    seq = SearchEngine(max_slots=2)
+    pip = SearchEngine(max_slots=2, pipelined=True)
+    seq.run(reqs), pip.run(reqs)  # warm: caches + programs
+    seq.reset_transfer_stats()
+    pip.reset_transfer_stats()
+    a = seq.run(reqs)
+    b = pip.run(reqs)
+    for x, y in zip(b, a):
+        _same_thin(x, y)
+    assert seq.launches == pip.launches == 3
+    assert pip.transfer_bytes * 10 <= seq.transfer_bytes, (
+        pip.transfer_bytes, seq.transfer_bytes)
+
+
+# ------------------------------------------------------------ service drain
+def test_service_pipelined_drain_parity(ws):
+    reqs = paper_request_mix(ws, 18, pop_size=POP, generations=4)
+
+    def drain(pipelined):
+        svc = DSEService(max_slots=8, pipelined=pipelined)
+        rids = svc.submit_all(reqs)
+        order = [rid for rid, _ in svc.stream()]
+        return svc, rids, order
+
+    s_seq, rids_seq, order_seq = drain(False)
+    s_pip, rids_pip, order_pip = drain(True)
+    assert order_seq == order_pip  # same plans, same yield boundaries
+    assert s_seq.stats.launches == s_pip.stats.launches
+    assert s_pip.stats.completed == len(reqs)
+    for ra, rb in zip(rids_seq, rids_pip):
+        _same_thin(s_pip.results[rb], s_seq.results[ra])
+    # telemetry shape: gap samples per launch, idle accumulates, and the
+    # summary keys serialize (None or float, never NaN)
+    assert len(s_pip.stats.dispatch_gap_samples) == s_pip.stats.launches
+    summ = s_pip.stats.summary()
+    assert "dispatch_gap_p50_s" in summ and "device_idle_s" in summ
+    assert s_seq.stats.dispatch_gap_p(50) == 0.0  # inline harvests
+
+
+def test_async_service_pipelined_parity(ws):
+    reqs = paper_request_mix(ws, 12, pop_size=POP, generations=4, seed0=7)
+    ref_svc = DSEService(max_slots=8)
+    ref_rids = ref_svc.submit_all(reqs)
+    ref_map = ref_svc.drain()
+    with AsyncDSEService(max_slots=8, pipelined=True) as svc:
+        futs = svc.submit_all(reqs)
+        res = [f.result(timeout=600) for f in futs]
+    for ra, b in zip(ref_rids, res):
+        _same_thin(b, ref_map[ra])
+
+
+def test_service_pipelined_falls_back_on_stub_engines(ws):
+    """Engines without the dispatch/harvest split (sim stubs, fault
+    wrappers) drain sequentially even under pipelined=True."""
+    class MiniEngine:
+        max_slots = 4
+        result_cache = None
+
+        def execute(self, plan, **kw):
+            return SearchEngine().execute(plan)
+
+    svc = DSEService(engine=MiniEngine(), pipelined=True)
+    assert not svc._can_pipeline
+    rids = svc.submit_all(_reqs(ws, 2, seed0=130))
+    out = svc.drain()
+    assert all(out[r].valid for r in rids)

@@ -1,16 +1,28 @@
 """CI regression gate: the fused fast path must outrun the unfused table
-row.
+row, and the pipelined transfer-thin path must not fall behind fused.
 
 Reads ``experiments/search_throughput.json`` (as written by the
-bench-smoke / perf-smoke legs just before this runs) and fails when the
-``fused`` row's warm designs/s fell below the ``table`` row's separate
-config — the fused generation step plus direct seeding exists ONLY as a
-speedup over that baseline, so "slower than unfused" is a regression by
-definition, whatever the absolute host speed.  Comparing two rows
-measured on the SAME host in the SAME job keeps the gate meaningful on
-throttled CI runners where an absolute designs/s floor would flake.
+bench-smoke / perf-smoke legs just before this runs) and fails when
 
-Exit 0 with a one-line verdict, exit 1 with both numbers on regression.
+  * the ``fused`` row's warm designs/s fell below the ``table`` row's
+    separate config — the fused generation step plus direct seeding
+    exists ONLY as a speedup over that baseline, so "slower than
+    unfused" is a regression by definition, whatever the absolute host
+    speed; or
+  * a recorded ``pipelined`` row fell below the ``fused`` row on the
+    same B=seeds x W separate/table configuration — the on-device top-k
+    epilogue exists to remove host transfer, never to cost throughput;
+    or
+  * the pipelined row's ``transfer_reduction_x`` (history bytes/launch
+    over thin bytes/launch, measured in the same job) dropped under
+    10x — the transfer-thin contract itself.
+
+Comparing rows measured on the SAME host in the SAME job keeps the gate
+meaningful on throttled CI runners where an absolute designs/s floor
+would flake.  The pipelined checks only engage when the row exists, so
+legs that record just fused/table keep their original gate.
+
+Exit 0 with one-line verdicts, exit 1 with both numbers on regression.
 """
 from __future__ import annotations
 
@@ -19,6 +31,8 @@ import sys
 from pathlib import Path
 
 EXP = Path(__file__).resolve().parents[1] / "experiments"
+
+MIN_TRANSFER_REDUCTION_X = 10.0
 
 
 def main() -> int:
@@ -40,6 +54,30 @@ def main() -> int:
     print(f"[fused-gate] ok: fused warm {fused:,.0f} designs/s >= "
           f"unfused table row {table:,.0f} designs/s "
           f"({fused / table:.2f}x)")
+
+    pipe = data.get("pipelined")
+    if pipe is None:
+        return 0
+    pipe_dps = pipe.get("designs_per_s")
+    red = pipe.get("transfer_reduction_x")
+    if pipe_dps is None or red is None:
+        print("[fused-gate] 'pipelined' row present but incomplete "
+              f"(designs_per_s={pipe_dps}, transfer_reduction_x={red})")
+        return 1
+    if pipe_dps < fused:
+        print(f"[fused-gate] REGRESSION: pipelined warm {pipe_dps:,.0f} "
+              f"designs/s < fused row {fused:,.0f} designs/s")
+        return 1
+    if red < MIN_TRANSFER_REDUCTION_X:
+        print(f"[fused-gate] REGRESSION: pipelined transfer reduction "
+              f"{red:.1f}x < {MIN_TRANSFER_REDUCTION_X:.0f}x "
+              f"({pipe.get('transfer_bytes_per_launch', 0):,.0f} B/launch "
+              f"thin vs {pipe.get('history_transfer_bytes_per_launch', 0):,.0f}"
+              f" B/launch history)")
+        return 1
+    print(f"[fused-gate] ok: pipelined warm {pipe_dps:,.0f} designs/s >= "
+          f"fused row ({pipe_dps / fused:.2f}x), transfer "
+          f"{red:.1f}x thinner than history sync")
     return 0
 
 

@@ -4,18 +4,25 @@
 #   bash tools/ci.sh multidevice   # tier-1 + sharding tests + sharded bench
 #                                  # row on a fake 8-device host
 #   bash tools/ci.sh bench-smoke   # tiny search-throughput run per backend;
-#                                  # appends the 'table', 'service' and
-#                                  # 'fused' rows of
+#                                  # appends the 'table', 'service',
+#                                  # 'fused' and 'pipelined' rows of
 #                                  # experiments/search_throughput.json so
 #                                  # the perf trajectory is recorded per
 #                                  # PR, then FAILS if the fused fast
 #                                  # path's warm designs/s fell below the
 #                                  # unfused table row (the fusion must
-#                                  # never regress into a slowdown)
+#                                  # never regress into a slowdown), if
+#                                  # the pipelined row fell below fused,
+#                                  # or if its host-transfer reduction
+#                                  # dropped under 10x
 #   bash tools/ci.sh perf-smoke    # fused-path gate: the fused/kernel/
-#                                  # seeder/grid parity suite, a quick
-#                                  # fused bench row, and the same
-#                                  # fused>=table regression gate
+#                                  # seeder/grid parity suite plus the
+#                                  # pipelined-engine parity suite
+#                                  # (tests/test_pipelined.py), a quick
+#                                  # fused bench row and a pipelined row,
+#                                  # and the fused>=table /
+#                                  # pipelined>=fused / 10x-transfer
+#                                  # regression gates
 #   bash tools/ci.sh serve-smoke   # DSE-service smoke, three legs: sync
 #                                  # fifo (~32 mixed requests, all results
 #                                  # finite), sync EDF (launch order ==
@@ -58,11 +65,13 @@ elif [[ "${1:-}" == "bench-smoke" ]]; then
   python -m benchmarks.bench_search_throughput --quick
   python -m benchmarks.bench_search_throughput --quick --backend table
   python -m benchmarks.bench_search_throughput --quick --fused --grid-density 1,2
+  python -m benchmarks.bench_search_throughput --quick --pipelined
   python -m benchmarks.bench_dse_service --quick
   python -m tools.check_fused_gate
 elif [[ "${1:-}" == "perf-smoke" ]]; then
-  python -m pytest -x -q tests/test_fused_gen.py
+  python -m pytest -x -q tests/test_fused_gen.py tests/test_pipelined.py
   python -m benchmarks.bench_search_throughput --quick --fused --grid-density 1,2
+  python -m benchmarks.bench_search_throughput --quick --pipelined
   python -m tools.check_fused_gate
 elif [[ "${1:-}" == "serve-smoke" ]]; then
   python -m pytest -x -q tests/test_scheduler_sim.py
