@@ -232,7 +232,9 @@ def smoke(n: int = 32) -> int:
 
 def _assert_bit_equal(a, b, ctx: str = "") -> None:
     """Two SearchResults must match bit-for-bit (the cache-hit contract:
-    a cached answer is THE answer, not an approximation of it)."""
+    a cached answer is THE answer, not an approximation of it).  Thin
+    full results (pipelined engines: ``ga is None``) compare on the thin
+    fields; both sides must agree on thinness."""
     import numpy as np
 
     assert a.objective == b.objective and a.workload_names == b.workload_names
@@ -242,6 +244,9 @@ def _assert_bit_equal(a, b, ctx: str = "") -> None:
         np.testing.assert_array_equal(
             np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
             err_msg=f"{ctx}: {name} differs")
+    assert (a.ga is None) == (b.ga is None), f"{ctx}: thinness differs"
+    if a.ga is None:
+        return
     for name in ("genomes", "scores", "best_genome", "best_score"):
         np.testing.assert_array_equal(
             np.asarray(getattr(a.ga, name)), np.asarray(getattr(b.ga, name)),
@@ -258,13 +263,14 @@ def cache_smoke(n: int = 32) -> int:
     same cache then repeats the mix a third time: all futures arrive
     already resolved, its service never launches at all.
     """
+    from repro.core.engine import SearchEngine
     from repro.serve.cache import ResultCache
     from repro.serve.dse import AsyncDSEService, DSEService, paper_request_mix
     from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
     from repro.workloads.pack import pack_workloads
 
     ws = pack_workloads([(nm, cnn_workload(nm)) for nm in PAPER_WORKLOADS])
-    mix = lambda: paper_request_mix(  # noqa: E731 — the one mix, three times
+    mix = lambda: paper_request_mix(  # noqa: E731 — the one mix, four times
         ws, n, backend="table", pop_size=40, generations=6)
     cache = ResultCache()
     svc = DSEService(result_cache=cache)
@@ -293,6 +299,32 @@ def cache_smoke(n: int = 32) -> int:
         _assert_bit_equal(cold[r1], res, f"async rid {r1}")
     print(f"[dse-service] cache-smoke: async resubmit {n}/{n} futures "
           f"pre-resolved, 0 launches, bit-identical")
+
+    # --- pipelined leg: THE ISSUE-10 regression.  Pipelined engines
+    # return thin full results (ga=None); the cache used to refuse them,
+    # so a pipelined service re-ran every resubmitted GA.  Now the same
+    # contract holds as above: zero new launches, bit-identical, hot.
+    pcache = ResultCache()
+    peng = SearchEngine(pipelined=True)
+    psvc = DSEService(engine=peng, result_cache=pcache)
+    prids = psvc.submit_all(mix())
+    pcold = dict(psvc.drain())
+    _assert_all_finite(prids, pcold)
+    assert all(pcold[r].ga is None for r in prids), \
+        "pipelined drain returned non-thin results"
+    assert len(pcache) == n, f"thin results not cached ({len(pcache)}/{n})"
+    launches_p = peng.launches
+    prids2 = psvc.submit_all(mix())
+    phot = dict(psvc.drain())
+    assert peng.launches == launches_p, \
+        f"pipelined hot resubmit launched GA work ({peng.launches - launches_p})"
+    assert psvc.stats.cache_hits == n, psvc.stats.cache_hits
+    assert pcache.stats.hit_rate() > 0
+    for r1, r2 in zip(prids, prids2):
+        _assert_bit_equal(pcold[r1], phot[r2], f"pipelined rid {r1}->{r2}")
+    print(f"[dse-service] cache-smoke: pipelined thin-result resubmit "
+          f"{n}/{n} hits, 0 new launches, bit-identical "
+          f"({pcache.stats.summary()})")
     return 0
 
 
@@ -306,6 +338,7 @@ def cache_run(quick: bool = False, verbose: bool = True) -> dict:
     number.  The hot/cold ratio is the throughput ceiling request
     overlap buys (a real stream sits in between, set by its hit rate).
     """
+    from repro.core.engine import SearchEngine
     from repro.serve.cache import ResultCache
     from repro.serve.dse import DSEService, paper_request_mix
     from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
@@ -336,6 +369,23 @@ def cache_run(quick: bool = False, verbose: bool = True) -> dict:
     assert svc.stats.launches == launches_cold, "hot drains launched GA work"
     assert svc.stats.cache_hits == warm_reps * n
 
+    # --- pipelined-resubmit measurement (the ISSUE-10 thin-result caching
+    # fix, recorded so tools/check_fused_gate.py --cache can gate it):
+    # a PIPELINED engine's thin full results must populate the cache, so
+    # an identical resubmit drains with zero new GA launches
+    n_pipe = 32
+    pcache = ResultCache(capacity=2 * n_pipe)
+    peng = SearchEngine(pipelined=True)
+    psvc = DSEService(engine=peng, result_cache=pcache)
+    pmix = paper_request_mix(ws, n_pipe, backend="table", pop_size=POP,
+                             generations=GENS, seed0=50_000)
+    psvc.submit_all(pmix)
+    psvc.drain()
+    launches_pipe_cold = peng.launches
+    psvc.submit_all(pmix)
+    psvc.drain()
+    pipe_resubmit_launches = peng.launches - launches_pipe_cold
+
     out = {
         "requests": n, "pop": POP, "gens": GENS, "backend": "table",
         "warm_reps": warm_reps,
@@ -348,11 +398,20 @@ def cache_run(quick: bool = False, verbose: bool = True) -> dict:
         "launches_cold": launches_cold,
         "launches_hot": 0,
         "cache": cache.stats.summary(),
+        "pipelined_resubmit": {
+            "requests": n_pipe,
+            "new_launches": int(pipe_resubmit_launches),
+            "cache_hits": int(psvc.stats.cache_hits),
+            "hit_rate": pcache.stats.hit_rate(),
+        },
     }
     if verbose:
         print(f"[dse-service] cache: {n} mixed requests cold {cold:.2f}s "
               f"({launches_cold} launches) -> hot {hot:.3f}s all-hits "
               f"({n/hot:.0f} req/s, {cold/hot:.0f}x, 0 launches)")
+        print(f"[dse-service] cache: pipelined resubmit x{n_pipe}: "
+              f"{pipe_resubmit_launches} new launches, "
+              f"hit rate {pcache.stats.hit_rate():.2f}")
     return out
 
 

@@ -305,6 +305,80 @@ def run_pipelined(quick: bool = False, verbose: bool = True) -> dict:
     return out
 
 
+def run_pareto(quick: bool = False, verbose: bool = True,
+               pareto_k: int = 10) -> dict:
+    """The multi-objective row: NSGA-II Pareto-front search
+    (``objective="pareto"``) on the fast-path configuration (B = seeds x W
+    separate searches, table backend, fused survival, direct seeding,
+    transfer-thin pipelined engine).  Each search returns its ``pareto_k``
+    best front members with per-member (E, L, A) vectors instead of one
+    scalar optimum — this row tracks what the front search costs relative
+    to the scalar ``pipelined`` row on the same B and operating point."""
+    import numpy as np
+
+    from repro.core.engine import SearchEngine
+    from repro.core.search import batched_search
+    from repro.workloads.cnn import PAPER_WORKLOADS, cnn_workload
+    from repro.workloads.pack import pack_workloads
+
+    ws = pack_workloads([(n, cnn_workload(n)) for n in PAPER_WORKLOADS])
+    W = ws.n
+    seeds = 10 if quick else 40
+    B = seeds * W
+    warm_reps = 2 if quick else 4
+    per_search = POP * (GENS + 1)
+    n = B * per_search
+
+    keys = np.concatenate([
+        np.asarray(jax.random.split(jax.random.PRNGKey(100 + s), W))
+        for s in range(seeds)
+    ])
+    feats = np.tile(np.asarray(ws.feats)[:, None], (seeds, 1, 1, 1))
+    mask = np.tile(np.asarray(ws.mask)[:, None], (seeds, 1, 1))
+    names = [(w,) for w in PAPER_WORKLOADS] * seeds
+
+    eng = SearchEngine(max_slots=B, fused=True, direct_seed=True,
+                       pipelined=True)
+
+    def go():
+        return batched_search(keys, feats, mask, names=names,
+                              pop_size=POP, generations=GENS,
+                              backend="table", objective="pareto",
+                              pareto_k=pareto_k, engine=eng)
+
+    t0 = time.time()
+    res = go()
+    _block(res)
+    cold = time.time() - t0
+    warm = float("inf")
+    for _ in range(warm_reps):
+        t0 = time.time()
+        res = go()
+        _block(res)
+        warm = min(warm, time.time() - t0)
+
+    front_sizes = [len(r.top_scores) for r in res]
+    out = {
+        "pop": POP, "gens": GENS, "searches": B, "backend": "table",
+        "config": "separate", "objective": "pareto",
+        "pareto_k": int(pareto_k), "fused": True, "direct_seed": True,
+        "pipelined": True, "warm_reps": warm_reps,
+        "paper_s_per_design": PAPER_S_PER_DESIGN,
+        "cold_s": cold,
+        "warm_s": warm,
+        "designs_per_s": n / warm,
+        "speedup_vs_paper": (n / warm) * PAPER_S_PER_DESIGN,
+        "mean_front_size": float(np.mean(front_sizes)),
+        "min_front_size": int(min(front_sizes)),
+    }
+    if verbose:
+        print(f"[search-thru] pareto x{B} (k={pareto_k}): cold {cold:.2f}s, "
+              f"warm {warm*1e3:.1f}ms -> {n/warm/1e6:.3f}M designs/s; "
+              f"front size mean {out['mean_front_size']:.1f} "
+              f"min {out['min_front_size']}")
+    return out
+
+
 def main(argv=None) -> int:
     import argparse
 
@@ -339,7 +413,23 @@ def main(argv=None) -> int:
              "engine (on-device top-k epilogue) and record the row under "
              "'pipelined' (warm designs/s + host-transfer bytes/launch)",
     )
+    ap.add_argument(
+        "--pareto", action="store_true",
+        help="run the fast-path config under objective='pareto' (NSGA-II "
+             "front search, thin pipelined engine) and record the row "
+             "under 'pareto' (warm designs/s + front-size stats)",
+    )
+    ap.add_argument("--pareto-k", type=int, default=10,
+                    help="front members per search for --pareto")
     args = ap.parse_args(argv)
+
+    if args.pareto:
+        if args.mesh or args.backend != "jnp" or args.fused or args.pipelined:
+            ap.error("--pareto is its own configuration; "
+                     "drop --mesh/--backend/--fused/--pipelined")
+        res = run_pareto(quick=args.quick, pareto_k=args.pareto_k)
+        write_search_throughput(res, row="pareto")
+        return 0
 
     if args.pipelined:
         if args.mesh or args.backend != "jnp" or args.fused:

@@ -46,7 +46,8 @@ def prepare_search_mesh(spec: str):
 
 
 # named rows kept alongside the top-level (dense, unsharded) trajectory
-EXTRA_ROWS = ("sharded", "table", "service", "cache", "fused", "pipelined")
+EXTRA_ROWS = ("sharded", "table", "service", "cache", "fused", "pipelined",
+              "pareto")
 
 
 def write_search_throughput(res: dict, *, row: str = None) -> Path:

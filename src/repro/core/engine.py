@@ -56,18 +56,23 @@ from repro.core.ga import (
     GAResult,
     GAState,
     GAThin,
+    ParetoThin,
     ga_epilogue_batched,
     init_ga_state_batched,
     run_ga_batched,
     run_ga_batched_segment,
     run_ga_batched_thin,
+    run_pareto_batched,
 )
 from repro.core.objectives import (
     OBJECTIVE_INDEX,
     OBJECTIVE_WEIGHTS,
+    PARETO,
     make_indexed_objective,
     make_objective,
+    make_pareto_objective,
     make_weighted_objective,
+    pareto_scalar,
 )
 from repro.imc.cost import evaluate_designs_arrays
 from repro.imc.tech import TECH, TechParams
@@ -93,6 +98,10 @@ class SearchResult:
     valid: bool = True  # False: no finite-scoring design in the history
     partial: bool = False  # True: search stopped before its full budget
     generations: int = -1  # generations actually applied (-1 = full budget)
+    # objective="pareto" only: per-member (max_W E, max_W L, A) vectors,
+    # (kept, 3) float32 aligned with top_genomes/top_scores; None for the
+    # scalar objective families
+    objective_vectors: Optional[np.ndarray] = None
 
 
 class EngineFault(RuntimeError):
@@ -129,15 +138,18 @@ def _ctx_eval(
     ``tables`` an ``imc.tables.WorkloadTables`` pytree (``_eval_ctx`` builds
     the right one).  ``objective`` selects the scoring tail: a kind string
     (static), ``None`` (trailing traced ``weights (3,)`` leaf, exponent-
-    weighted), or ``INDEXED`` (trailing traced ``(kind_index, area)``
-    leaves — the engine's mixed-objective path, bit-identical per branch
-    to the static kinds).  The cache (plus workload tensors/tables being
+    weighted), ``PARETO`` (trailing traced ``area`` leaf; the fn returns
+    (P, 3) objective VECTORS for NSGA-II survival), or ``INDEXED``
+    (trailing traced ``(kind_index, area)`` leaves — the engine's
+    mixed-objective path, bit-identical per branch to the static kinds).  The cache (plus workload tensors/tables being
     traced, not closed over) is what keeps the GA jit from retracing
     across seeds, workload sets and objectives."""
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     if objective == INDEXED:
         obj = make_indexed_objective()
+    elif objective == PARETO:
+        obj = make_pareto_objective()
     elif objective is None:
         obj = make_weighted_objective(area_constr)
     else:
@@ -166,7 +178,11 @@ def _ctx_eval(
         r = ev(genomes, ctx)
         if objective == INDEXED:
             return obj(r, ctx[-2], ctx[-1])
-        return obj(r, ctx[-1]) if objective is None else obj(r)
+        if objective == PARETO or objective is None:
+            # one trailing traced leaf: the (3,) weights (weighted) or the
+            # () area constraint (pareto vector objective)
+            return obj(r, ctx[-1])
+        return obj(r)
 
     if backend == "table" and objective == INDEXED:
         # advertise the whole-generation Pallas kernel
@@ -566,6 +582,52 @@ def _finalize_batch_thin(
     return out
 
 
+def _finalize_batch_pareto(
+    thin_np: ParetoThin, requests: Sequence["SearchRequest"],
+    *, history: Optional[tuple] = None,
+) -> List[SearchResult]:
+    """Host finalize of a Pareto plan: the device epilogue already picked
+    each slot's crowded-order front members (K = the plan's max
+    ``pareto_k``, cell-deduped exactly like the scalar thin epilogue), so
+    this slices each request's own ``pareto_k`` prefix, decodes the kept
+    genomes, and attaches the per-member (E, L, A) vectors.  ``history``
+    is the optional synced ``(genomes_hist, objs_hist)`` pair from a
+    sequential engine; its scalar-proxy scores (``pareto_scalar`` — the
+    E*L*A bits of the ``ela`` objective) make the attached ``ga`` usable
+    by every history consumer (rescoring, partial snapshots, caching)."""
+    out = []
+    gh_np = sh_np = None
+    if history is not None:
+        gh_np, oh_np = history
+        # host numpy multiply in (E, L, A) order: same f32 products, same
+        # association as the in-jit pareto_scalar — bit-identical
+        sh_np = np.asarray(oh_np[..., 0] * oh_np[..., 1] * oh_np[..., 2])
+    for i, r in enumerate(requests):
+        kept = int(min(int(thin_np.n_kept[i]), int(r.pareto_k)))
+        top_g = thin_np.top_genomes[i][:kept]
+        top_v = thin_np.top_vectors[i][:kept]
+        top_s = thin_np.top_scores[i][:kept]
+        conv = thin_np.convergence[i]
+        ga = None
+        if gh_np is not None:
+            ga = SearchEngine._history_result(gh_np[i], sh_np[i])
+        out.append(SearchResult(
+            workload_names=tuple(r.ws.names),
+            objective=PARETO,
+            ga=ga,
+            top_designs=space.design_dicts_from_indices(
+                space.decode_indices_np(top_g)),
+            top_scores=top_s,
+            top_genomes=top_g,
+            convergence=conv,
+            valid=bool(kept),
+            partial=False,
+            generations=int(conv.shape[-1]) - 1,
+            objective_vectors=top_v,
+        ))
+    return out
+
+
 def _finalize(
     ga: GAResult, names: Sequence[str], objective: str, top_k: int,
     *, partial: bool = False,
@@ -651,6 +713,12 @@ class SearchRequest:
     pop_size: int = 40
     generations: int = 10
     top_k: int = 10
+    # objective="pareto" only: how many front members the result returns
+    # (crowded order; large enough k covers the whole first front).  Not
+    # part of signature() — like top_k it never changes the compiled
+    # program — but request_key/plan_key hash it, so cached fronts of
+    # different widths can never collide.
+    pareto_k: int = 10
     tech: TechParams = TECH
     init_genomes: Optional[Any] = None  # (pop_size, n); never consumed
     priority: int = 0  # 0 = most urgent; scheduling-only, not traced
@@ -668,19 +736,24 @@ class SearchRequest:
         / data-only and deliberately absent."""
         if self.backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {self.backend!r}")
-        if self.obj_weights is None and self.objective not in OBJECTIVE_INDEX:
+        if self.objective == PARETO:
+            if self.obj_weights is not None:
+                raise ValueError("objective='pareto' is incompatible with obj_weights")
+            if int(self.pareto_k) < 1:
+                raise ValueError(f"pareto_k must be >= 1, got {self.pareto_k!r}")
+            obj = ("pareto",)
+        elif self.obj_weights is not None:
+            obj = ("weighted", float(self.area_constr))
+        elif self.objective not in OBJECTIVE_INDEX:
             raise ValueError(
-                f"objective must be one of {tuple(OBJECTIVE_INDEX)} "
-                f"(or pass obj_weights), got {self.objective!r}"
+                f"objective must be one of {tuple(OBJECTIVE_INDEX)} or "
+                f"{PARETO!r} (or pass obj_weights), got {self.objective!r}"
             )
+        else:
+            obj = ("indexed",)
         shape = (
             () if self.backend == "table"
             else (int(self.ws.feats.shape[0]), int(self.ws.feats.shape[1]))
-        )
-        obj = (
-            ("weighted", float(self.area_constr))
-            if self.obj_weights is not None
-            else ("indexed",)
         )
         return (self.backend, int(self.pop_size), int(self.generations),
                 self.tech, shape, obj)
@@ -717,7 +790,8 @@ def plan_key(plan: BatchPlan) -> str:
         h.update(r.ws.fingerprint().encode())
         h.update(repr((
             r.objective, r.obj_weights, float(r.area_constr), r.backend,
-            int(r.pop_size), int(r.generations), int(r.top_k), r.tech,
+            int(r.pop_size), int(r.generations), int(r.top_k),
+            int(r.pareto_k), r.tech,
         )).encode())
         h.update(np.asarray(r.prng_key()).tobytes())
     h.update(repr((int(plan.slots), int(plan.pad_w), int(plan.pad_l))).encode())
@@ -909,6 +983,9 @@ class PendingLaunch:
     thin: Optional[GAThin] = None
     ga: Optional[GAResult] = None
     results: Optional[List[SearchResult]] = None
+    # pareto plans: (genomes_hist, objs_hist, ParetoThin) un-synced device
+    # arrays; the history pair is (None, None) when pipelined (thin-only)
+    pareto: Optional[tuple] = None
     seed_check: Optional[Callable] = None
 
 
@@ -954,11 +1031,12 @@ class SearchEngine:
         ``dispatch``/``harvest`` so ``run()`` (and a pipelined service
         drain) overlaps chunk i's host finalize with chunk i+1's device
         compute.  Result fields are bit-identical to the sequential path
-        (tests/test_pipelined.py) EXCEPT ``SearchResult.ga`` is ``None``
-        — which also means pipelined results are not result-CACHEABLE
-        (``ResultCache.put`` refuses them); cache GETs still serve full
-        entries, and fault partials / checkpoints stay full-history and
-        bit-identical either way.
+        (tests/test_pipelined.py) EXCEPT ``SearchResult.ga`` is ``None``.
+        Thin FULL results are still result-cacheable — ``ResultCache``
+        round-trips ``ga=None`` entries (only ``partial=True`` results
+        are refused), so ``pipelined=True`` + ``result_cache`` resolves
+        a resubmitted drain with zero GA launches; fault partials /
+        checkpoints stay full-history and bit-identical either way.
 
     ``transfer_bytes`` / ``launches`` count device->host bytes and plan
     launches since construction (or ``reset_transfer_stats()``) — the
@@ -1100,6 +1178,26 @@ class SearchEngine:
         still defers its final sync/finalize to ``harvest``."""
         mesh = self.mesh if mesh is None else mesh
         r0 = plan.requests[0]
+        if r0.objective == PARETO and r0.obj_weights is None:
+            # Pareto plans always run single-shot: NSGA-II survival carries
+            # an (objs, sel) state the segmented GAState does not model, so
+            # segment_gens/checkpointing do not apply to this family.  Both
+            # engine modes run the SAME fused device epilogue — front
+            # selection is bit-identical across sequential/pipelined by
+            # construction; sequential additionally keeps the history.
+            prep = self._prepare(plan, mesh, defer_seed=self.pipelined)
+            self.launches += 1
+            kw = dict(pop_size=r0.pop_size, generations=r0.generations,
+                      init_genomes=prep.init, ctx=prep.ctx, fused=self.fused,
+                      top_k=max(int(r.pareto_k) for r in plan.requests))
+            if self.pipelined:
+                thin = run_pareto_batched(prep.k_ga, prep.eval_fn, **kw)
+                return PendingLaunch(plan=plan, pareto=(None, None, thin),
+                                     seed_check=prep.seed_check)
+            gh, oh, thin = run_pareto_batched(prep.k_ga, prep.eval_fn,
+                                              history=True, **kw)
+            return PendingLaunch(plan=plan, pareto=(gh, oh, thin),
+                                 seed_check=prep.seed_check)
         k = self.segment_gens
         if k is not None and 0 < k < int(r0.generations):
             return self._dispatch_segmented(plan, mesh, k,
@@ -1129,6 +1227,14 @@ class SearchEngine:
             pending.seed_check()
         if pending.results is not None:
             results = pending.results
+        elif pending.pareto is not None:
+            gh, oh, thin = pending.pareto
+            thin_np = ParetoThin(*(self._sync(f) for f in thin))
+            history = None
+            if gh is not None:
+                history = (self._sync(gh), self._sync(oh))
+            results = _finalize_batch_pareto(thin_np, pending.plan.requests,
+                                             history=history)
         elif pending.thin is not None:
             thin_np = GAThin(*(self._sync(f) for f in pending.thin))
             results = _finalize_batch_thin(thin_np, pending.plan.requests)
@@ -1220,8 +1326,13 @@ class SearchEngine:
             packed, k_seed, feats, mask, place, tables=tables,
             defer=defer_seed)
 
-        # objective tail: traced exponent weights, or traced (kind, area)
-        if r0.obj_weights is not None:
+        # objective tail: pareto's traced area, traced exponent weights,
+        # or traced (kind, area)
+        if r0.objective == PARETO and r0.obj_weights is None:
+            areas = jnp.asarray([r.area_constr for r in packed], jnp.float32)
+            ctx = ctx + (place(areas),)
+            eval_fn = _ctx_eval(PARETO, 0.0, tech, backend)
+        elif r0.obj_weights is not None:
             w = jnp.asarray([r.obj_weights for r in packed], jnp.float32)
             ctx = ctx + (place(w),)
             eval_fn = _ctx_eval(None, float(r0.area_constr), tech, backend)

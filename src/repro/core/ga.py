@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import space
+from repro.core.objectives import pareto_scalar
 
 SBX_PROB = 0.95
 SBX_ETA = 3.0
@@ -115,6 +116,26 @@ class GAThin(NamedTuple):
     convergence: jnp.ndarray  # (G+1,) running best score
 
 
+class ParetoThin(NamedTuple):
+    """The transfer-thin Pareto-front result: ``GAThin``'s twin for
+    ``objective="pareto"`` requests.  ``top_genomes`` / ``top_vectors`` /
+    ``top_scores`` hold the ``min(top_k, unique feasible cells)`` best
+    front members in crowded order — ascending non-domination rank,
+    descending crowding within a rank, flat history index as the final
+    tie-break — deduped by decoded grid cell exactly like ``GAThin``.
+    ``top_vectors`` carries each member's (max_W E, max_W L, A) triple;
+    ``top_scores`` its scalar E*L*A proxy (bit-identical to the ``ela``
+    objective on feasible rows).  ``convergence`` is the running best of
+    that proxy.  Slots past ``n_kept`` are padding (genome 0, vector and
+    score +inf).  Batched variants carry a leading (B,) axis."""
+
+    top_genomes: jnp.ndarray  # (K, n) front members, crowded order
+    top_vectors: jnp.ndarray  # (K, M) per-member (E, L, A)
+    top_scores: jnp.ndarray  # (K,) scalar E*L*A proxy
+    n_kept: jnp.ndarray  # () int32, valid entries in top_*
+    convergence: jnp.ndarray  # (G+1,) running best scalar proxy
+
+
 class _IgnoreCtx:
     """Adapt a ctx-less ``eval_fn(genomes)`` to the internal
     ``eval_fn(genomes, ctx)`` convention.  Hash/eq delegate to the wrapped
@@ -168,6 +189,106 @@ def _survivor_indices(scores: jnp.ndarray, k: int) -> jnp.ndarray:
     iota = jax.lax.iota(jnp.int32, n)
     _, idx = jax.lax.sort((order, iota), num_keys=2, is_stable=False)
     return idx[:k]
+
+
+def _fold_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """float32 -> total-order int32: the sign-folded sort key of
+    ``_survivor_indices`` as a reusable helper (negative floats map to
+    -magnitude, both zero signs collapse to 0, +inf stays below the
+    0x7FFFFFFF sentinel).  Ascending int order == ascending float order
+    for every non-NaN value."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return jnp.where(bits < 0, -(bits & jnp.int32(0x7FFFFFFF)), bits)
+
+
+# --------------------------------------------- NSGA-II building blocks
+def _dominance_rank(objs: jnp.ndarray) -> jnp.ndarray:
+    """(N, M) objective vectors -> (N,) int32 non-domination rank
+    (0 = the Pareto front), minimization on every component.
+
+    Brute-force O(N^2) dominance mask + iterative front peeling — the
+    survival step only ever ranks 2P candidates and the epilogue
+    (G+1)*P, both small enough that the dense mask beats any clever
+    sort-based front construction on this stack, and the same loop IS
+    the reference algorithm the numpy oracle in tests/test_pareto.py
+    replays verbatim.  Rows with a NaN component compare False both
+    ways, so they neither dominate nor are dominated (callers mask
+    non-finite rows out of any selection); all-+inf infeasible rows tie
+    with each other and are dominated by every feasible design."""
+    N = objs.shape[0]
+    le = (objs[:, None, :] <= objs[None, :, :]).all(axis=-1)
+    lt = (objs[:, None, :] < objs[None, :, :]).any(axis=-1)
+    dom = le & lt  # dom[i, j]: i strictly dominates j
+
+    def cond(state):
+        return (state[0] < 0).any()
+
+    def body(state):
+        rank, r = state
+        unassigned = rank < jnp.int32(0)
+        blocked = (dom & unassigned[:, None]).any(axis=0)
+        front = unassigned & ~blocked
+        return jnp.where(front, r, rank), r + jnp.int32(1)
+
+    rank, _ = jax.lax.while_loop(
+        cond, body, (jnp.full((N,), -1, jnp.int32), jnp.int32(0)))
+    return rank
+
+
+def _crowding(objs: jnp.ndarray) -> jnp.ndarray:
+    """(N, M) -> (N,) float32 crowding distance, computed as one
+    ``lax.sort`` pass per objective over the sign-folded total-order
+    int32 bits (``_fold_bits``).
+
+    Distances are measured in folded-bit space rather than raw float
+    space: the fold is strictly monotone, every +/-inf objective maps to
+    a finite int32, and the neighbour/span arithmetic (cast to float32)
+    therefore never produces the inf-inf NaNs the raw values would —
+    which is what keeps the adversarial all-+inf-infeasible case exact.
+    Each per-objective pass sorts ``(key, iota)`` (a unique total order,
+    shard-stable like ``_survivor_indices``), gives the two boundary
+    designs +inf distance, interior designs their normalized
+    neighbour-gap, and scatter-adds through the permutation (unique
+    indices, so the scatter is deterministic)."""
+    N, M = objs.shape
+    iota = jax.lax.iota(jnp.int32, N)
+    total = jnp.zeros((N,), jnp.float32)
+    for m in range(M):
+        key = _fold_bits(objs[:, m])
+        skey, perm = jax.lax.sort((key, iota), num_keys=2, is_stable=False)
+        kf = skey.astype(jnp.float32)
+        span = kf[-1] - kf[0]
+        prev = jnp.concatenate([kf[:1], kf[:-1]])
+        nxt = jnp.concatenate([kf[1:], kf[-1:]])
+        d = jnp.where(span > 0, (nxt - prev) / span, jnp.float32(0.0))
+        d = d.at[0].set(jnp.float32(jnp.inf))
+        d = d.at[N - 1].set(jnp.float32(jnp.inf))
+        total = total.at[perm].add(d)
+    return total
+
+
+def _crowded_order_keys(objs: jnp.ndarray):
+    """The (rank, -crowding) survival sort keys as an int32 pair.
+    Crowding is non-negative and never NaN, so its raw float32 bit
+    pattern is monotone and negating it sorts descending — ascending
+    ``(rank, ckey, index)`` is exactly NSGA-II's crowded comparison."""
+    rank = _dominance_rank(objs)
+    crowd = _crowding(objs)
+    ckey = -jax.lax.bitcast_convert_type(crowd, jnp.int32)
+    return rank, ckey
+
+
+def _crowded_positions(objs: jnp.ndarray) -> jnp.ndarray:
+    """(P, M) -> (P,) float32 crowded-comparison position (0 = best) of
+    each design WITHOUT reordering the population — the tournament
+    selection key for the initial generation (survival emits later
+    populations already in crowded order, so their key is just iota)."""
+    P = objs.shape[0]
+    rank, ckey = _crowded_order_keys(objs)
+    iota = jax.lax.iota(jnp.int32, P)
+    _, _, perm = jax.lax.sort((rank, ckey, iota), num_keys=3, is_stable=False)
+    pos = jnp.zeros((P,), jnp.int32).at[perm].set(iota)
+    return pos.astype(jnp.float32)
 
 
 def _tournament(key, scores: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -229,10 +350,23 @@ def _poly_mutation(key, x: jnp.ndarray, eta: float, prob: float):
 
 
 def _make_gen_step(eval_fn, ctx, pop_size, n_genes, sbx_prob, sbx_eta, mut_eta,
-                   fused=True):
+                   fused=True, pareto=False):
     """The per-generation scan body, shared verbatim by the single-shot
     ``_ga_core`` and the segmented ``_segment_core`` so both paths compile
     the exact same generation program (the bit-parity guarantee).
+
+    ``pareto=True`` swaps ONLY the fitness plumbing around the shared
+    variation body (tournament -> SBX -> mutation, identical slicing of
+    the same uniform block): the carry becomes ``(pop, objs (P, M),
+    sel)`` where ``sel`` is the crowded-comparison position each
+    tournament compares instead of a scalar score, ``eval_fn`` returns
+    (P, M) objective vectors, and survival replaces the (mu + lambda)
+    scalar sort with NSGA-II (rank, crowding) selection over the same
+    combined-``lax.sort`` machinery — ``fused`` carries the objective
+    columns through the sort, unfused gathers them by the sorted index;
+    both apply the identical permutation.  The Pallas whole-generation
+    kernel only understands scalar scores, so the kernel hook is gated
+    off under ``pareto``.
 
     All per-generation randomness comes from ONE uniform block sliced at
     static offsets — the many small threefry launches of the original
@@ -265,7 +399,7 @@ def _make_gen_step(eval_fn, ctx, pop_size, n_genes, sbx_prob, sbx_eta, mut_eta,
     o_md = o_mu + P * n          # mutation per-gene gate
     tot = o_md
 
-    if fused and gen_kernel_enabled() \
+    if fused and not pareto and gen_kernel_enabled() \
             and getattr(eval_fn, "gen_kernel_tech", None) is not None:
         from repro.kernels.ga_gen_step import make_kernel_gen_step
 
@@ -277,7 +411,11 @@ def _make_gen_step(eval_fn, ctx, pop_size, n_genes, sbx_prob, sbx_eta, mut_eta,
             return kgen
 
     def gen(carry, k):
-        pop, scores = carry
+        if pareto:
+            pop, objs, sel = carry
+            scores = sel  # crowded-comparison position, lower = better
+        else:
+            pop, scores = carry
         u = jax.random.uniform(k, (tot,))
         # binary tournament: 2*n_pairs contests of 2 contestants each
         ti = (u[:o_t] * P).astype(jnp.int32)
@@ -313,6 +451,27 @@ def _make_gen_step(eval_fn, ctx, pop_size, n_genes, sbx_prob, sbx_eta, mut_eta,
         children = jnp.clip(
             jnp.where(do, children + delta, children), 0.0, 1.0 - 1e-7)
         child_scores = eval_fn(children, ctx)
+        if pareto:
+            # NSGA-II survival: (rank, crowding) over the 2P candidates
+            allg = jnp.concatenate([pop, children], axis=0)
+            allo = jnp.concatenate([objs, child_scores], axis=0)
+            rank, ckey = _crowded_order_keys(allo)
+            iota = jax.lax.iota(jnp.int32, 2 * P)
+            if fused:
+                cols = tuple(allo[:, m] for m in range(allo.shape[-1]))
+                srt = jax.lax.sort((rank, ckey, iota) + cols, num_keys=3,
+                                   is_stable=False)
+                idx = srt[2]
+                new_pop = allg[idx[:P]]
+                new_objs = jnp.stack(srt[3:], axis=-1)[:P]
+            else:
+                _, _, idx = jax.lax.sort((rank, ckey, iota), num_keys=3,
+                                         is_stable=False)
+                new_pop, new_objs = allg[idx[:P]], allo[idx[:P]]
+            # survival order == crowded order, so the next tournament's
+            # selection key is just the position
+            new_sel = jax.lax.iota(jnp.int32, P).astype(jnp.float32)
+            return (new_pop, new_objs, new_sel), (children, child_scores)
         # (mu + lambda) elitist survival
         allg = jnp.concatenate([pop, children], axis=0)
         alls = jnp.concatenate([scores, child_scores], axis=0)
@@ -353,6 +512,27 @@ def _ga_core(
         best_genome=genomes_hist.reshape(-1, n)[best],
         best_score=flat_s[best],
     )
+
+
+def _pareto_core(
+    key, eval_fn, pop_size, generations, init_genomes, ctx,
+    sbx_prob, sbx_eta, mut_eta, fused,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The Pareto twin of ``_ga_core``: same master-key stream, same
+    variation, NSGA-II survival.  ``eval_fn(genomes, ctx)`` must return
+    (P, M) objective vectors.  Returns the evaluated history
+    ``(genomes_hist (G+1, P, n), objs_hist (G+1, P, M))``; front
+    extraction is the epilogue's job (``_pareto_epilogue``)."""
+    n = init_genomes.shape[-1]
+    o0 = eval_fn(init_genomes, ctx)
+    sel0 = _crowded_positions(o0)
+    gen = _make_gen_step(eval_fn, ctx, pop_size, n, sbx_prob, sbx_eta,
+                         mut_eta, fused=fused, pareto=True)
+    keys = jax.random.split(key, generations)
+    _, (hist_g, hist_o) = jax.lax.scan(gen, (init_genomes, o0, sel0), keys)
+    genomes_hist = jnp.concatenate([init_genomes[None], hist_g], axis=0)
+    objs_hist = jnp.concatenate([o0[None], hist_o], axis=0)
+    return genomes_hist, objs_hist
 
 
 def _segment_core(
@@ -605,6 +785,28 @@ def run_ga_batched_segment(
 
 
 # ------------------------------------------------------- thin epilogue
+def _cell_codes(flat_g: jnp.ndarray) -> list:
+    """Decoded-grid-cell identity of each design as 1-2 mixed-radix
+    int32 codes (columns packed greedily while the radix product fits —
+    the host's single int64 code is unavailable in-jit without global
+    x64; SPACE_SIZE overflows int32 at grid density >= 2).  Two designs
+    share a cell iff every code matches.  Shared by the scalar and
+    Pareto thin epilogues so both dedup in exactly the host
+    ``engine._top_unique`` cell space."""
+    n = flat_g.shape[-1]
+    idx = space.decode_indices(flat_g)  # (N, n) int32 grid cells
+    sizes = [len(space.SPACE[f]) for f in space.FIELDS]
+    codes, grp, prod = [], None, 1
+    for j in range(n):
+        if grp is None or prod * sizes[j] > 0x7FFFFFFF:
+            grp, prod = jnp.int32(0), 1
+            codes.append(None)
+        grp = grp * jnp.int32(sizes[j]) + idx[:, j]
+        prod *= sizes[j]
+        codes[-1] = grp
+    return codes
+
+
 def _thin_epilogue(genomes_hist, scores_hist, top_k: int) -> GAThin:
     """In-jit top-k-unique + convergence over one slot's full history.
 
@@ -650,20 +852,8 @@ def _thin_epilogue(genomes_hist, scores_hist, top_k: int) -> GAThin:
     N = G1 * P
     flat_g = genomes_hist.reshape(N, n)
     flat_s = scores_hist.reshape(N)
-    bits = jax.lax.bitcast_convert_type(flat_s.astype(jnp.float32), jnp.int32)
-    fold = jnp.where(bits < 0, -(bits & jnp.int32(0x7FFFFFFF)), bits)
-    idx = space.decode_indices(flat_g)  # (N, n) int32 grid cells
-    # pack the cell columns into as few int32 codes as the grid permits
-    # (trace-time constants; configure_grid clears jit caches on change)
-    sizes = [len(space.SPACE[f]) for f in space.FIELDS]
-    codes, grp, prod = [], None, 1
-    for j in range(n):
-        if grp is None or prod * sizes[j] > 0x7FFFFFFF:
-            grp, prod = jnp.int32(0), 1
-            codes.append(None)
-        grp = grp * jnp.int32(sizes[j]) + idx[:, j]
-        prod *= sizes[j]
-        codes[-1] = grp
+    fold = _fold_bits(flat_s)
+    codes = _cell_codes(flat_g)
     k = min(int(top_k), N)
     sentinel = jnp.int32(0x7FFFFFFF)  # > every folded finite/inf key
 
@@ -759,5 +949,158 @@ def ga_epilogue_batched(
     snapshots and the final result without syncing the history itself."""
     return _epilogue_batched_jit(
         jnp.asarray(genomes_hist), jnp.asarray(scores_hist),
+        top_k=int(top_k),
+    )
+
+
+# ---------------------------------------------------- pareto epilogue
+def _pareto_epilogue(genomes_hist, objs_hist, top_k: int) -> ParetoThin:
+    """In-jit k-best-front-members + convergence over one slot's full
+    evaluated history — the Pareto twin of ``_thin_epilogue``, and the
+    single selection every execution mode shares (sequential engines run
+    it on the device history, pipelined engines fuse it onto the GA
+    program), which is what makes sequential/pipelined fronts
+    bit-identical by construction.
+
+    Selection order: ascending non-domination rank over ALL (G+1)*P
+    evaluated designs (``_dominance_rank`` — the O(N^2) mask the numpy
+    oracle replays), descending crowding within a rank (``_crowding``,
+    folded-bit sort passes), flat history index as the final tie-break.
+    Non-finite rows (infeasible all-+inf, NaN-guarded evals) are masked
+    to the sentinel before selection — same role as the finite filter of
+    the scalar path.  ``top_k`` masked-argmin rounds then pick the best
+    unseen design and retire its whole decoded grid cell
+    (``_cell_codes``), exactly the scalar epilogue's
+    first-occurrence-per-class dedup but in crowded order, so a cell's
+    representative is its best-crowded occurrence.  ``n_kept`` counts
+    the fresh feasible cells found, i.e. ``min(#unique feasible cells,
+    top_k)`` — with ``top_k`` large enough the picks cover the entire
+    first front (and only then spill into rank 1, 2, ...).
+
+    ``convergence`` tracks the running best scalar E*L*A proxy
+    (``objectives.pareto_scalar``), bit-identical to an ``ela`` curve
+    over the same designs.  Padding rows are genome 0 / vector + score
+    +inf; the host slices them off."""
+    G1, P, n = genomes_hist.shape
+    M = objs_hist.shape[-1]
+    N = G1 * P
+    flat_g = genomes_hist.reshape(N, n)
+    flat_o = objs_hist.reshape(N, M)
+    flat_s = pareto_scalar(flat_o)
+    rank, ckey = _crowded_order_keys(flat_o)
+    feas = jnp.isfinite(flat_o).all(axis=-1)
+    iota = jax.lax.iota(jnp.int32, N)
+    _, _, perm = jax.lax.sort((rank, ckey, iota), num_keys=3, is_stable=False)
+    pos = jnp.zeros((N,), jnp.int32).at[perm].set(iota)
+    sentinel = jnp.int32(0x7FFFFFFF)  # > every position (N << 2^31)
+    codes = _cell_codes(flat_g)
+    k = min(int(top_k), N)
+
+    def pick(i, carry):
+        okey, top_g, top_v, top_s, cnt = carry
+        j = jnp.argmin(okey)
+        valid = okey[j] < sentinel
+        top_g = top_g.at[i].set(jnp.where(valid, flat_g[j], jnp.float32(0.0)))
+        top_v = top_v.at[i].set(
+            jnp.where(valid, flat_o[j], jnp.float32(jnp.inf)))
+        top_s = top_s.at[i].set(
+            jnp.where(valid, flat_s[j], jnp.float32(jnp.inf)))
+        same = codes[0] == codes[0][j]
+        for c in codes[1:]:
+            same = same & (c == c[j])
+        okey = jnp.where(same, sentinel, okey)
+        return okey, top_g, top_v, top_s, cnt + valid.astype(jnp.int32)
+
+    _, top_g, top_v, top_s, n_kept = jax.lax.fori_loop(0, k, pick, (
+        jnp.where(feas, pos, sentinel),
+        jnp.zeros((k, n), flat_g.dtype),
+        jnp.full((k, M), jnp.inf, jnp.float32),
+        jnp.full((k,), jnp.inf, jnp.float32),
+        jnp.int32(0),
+    ))
+    conv = jax.lax.cummin(jnp.min(flat_s.reshape(G1, P), axis=1))
+    return ParetoThin(top_genomes=top_g, top_vectors=top_v, top_scores=top_s,
+                      n_kept=n_kept, convergence=conv)
+
+
+_PARETO_STATICS = _GA_STATICS + ("top_k", "history")
+
+
+@partial(jax.jit, static_argnames=_PARETO_STATICS,
+         donate_argnames=("init_genomes",))
+def _run_pareto_batched_jit(keys, init_genomes, ctx, *, eval_fn, pop_size,
+                            generations, sbx_prob, sbx_eta, mut_eta, fused,
+                            top_k, history):
+    def one(key, init, c):
+        gh, oh = _pareto_core(key, eval_fn, pop_size, generations, init, c,
+                              sbx_prob, sbx_eta, mut_eta, fused)
+        thin = _pareto_epilogue(gh, oh, top_k)
+        if history:
+            return gh, oh, thin
+        return thin
+
+    ctx_axes = jax.tree_util.tree_map(lambda _: 0, ctx)
+    return jax.vmap(one, in_axes=(0, 0, ctx_axes))(keys, init_genomes, ctx)
+
+
+@partial(jax.jit, static_argnames=("top_k",))
+def _pareto_epilogue_batched_jit(genomes_hist, objs_hist, *, top_k):
+    return jax.vmap(
+        lambda g, o: _pareto_epilogue(g, o, top_k)
+    )(genomes_hist, objs_hist)
+
+
+def run_pareto_batched(
+    keys: jnp.ndarray,
+    eval_fn: Callable,
+    *,
+    pop_size: int,
+    generations: int,
+    init_genomes: jnp.ndarray,
+    top_k: int,
+    ctx: Any = None,
+    sbx_prob: float = SBX_PROB,
+    sbx_eta: float = SBX_ETA,
+    mut_eta: float = MUT_ETA,
+    fused: Optional[bool] = None,
+    history: bool = False,
+):
+    """B independent NSGA-II Pareto searches in one vmapped, donated XLA
+    program, front extraction fused on device.
+
+    ``eval_fn(genomes, ctx)`` must return (P, M) minimization objective
+    vectors (``objectives.make_pareto_objective``).  With
+    ``history=False`` (the pipelined engine) only the batched
+    ``ParetoThin`` is returned/synced; ``history=True`` (sequential
+    engines, which also need the history for result caching and
+    partials) additionally returns ``(genomes_hist (B, G+1, P, n),
+    objs_hist (B, G+1, P, M))``.  Both run the IDENTICAL program prefix
+    and epilogue, so the selected front members are bit-identical across
+    the two modes, and across ``fused``/unfused survival (same sort
+    permutation — tests/test_pareto.py)."""
+    if ctx is None and not isinstance(eval_fn, _IgnoreCtx):
+        eval_fn = _IgnoreCtx(eval_fn)
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        return _run_pareto_batched_jit(
+            keys, init_genomes, ctx,
+            eval_fn=eval_fn, pop_size=int(pop_size),
+            generations=int(generations), sbx_prob=float(sbx_prob),
+            sbx_eta=float(sbx_eta), mut_eta=float(mut_eta),
+            fused=bool(default_fused() if fused is None else fused),
+            top_k=int(top_k), history=bool(history),
+        )
+
+
+def pareto_epilogue_batched(
+    genomes_hist: jnp.ndarray, objs_hist: jnp.ndarray, *, top_k: int,
+) -> ParetoThin:
+    """Standalone batched Pareto epilogue over accumulated histories
+    ((B, G+1, P, n) / (B, G+1, P, M), host or device) — the reference
+    entry point the oracle-parity tests drive directly."""
+    return _pareto_epilogue_batched_jit(
+        jnp.asarray(genomes_hist), jnp.asarray(objs_hist),
         top_k=int(top_k),
     )

@@ -28,6 +28,21 @@ def _joint(x: jnp.ndarray) -> jnp.ndarray:
     return x.max(axis=-1)
 
 
+@jax.custom_batching.custom_vmap
+def _pin(e, l, a):
+    """``lax.optimization_barrier`` with a vmap rule (the primitive has
+    none): pins the metric triple as standalone buffers so neither fusion
+    nor GSPMD sharding propagation rewrites the upstream cost model to
+    suit the consumers.  Under vmap the barrier simply applies to the
+    batched arrays — the pinning is exactly as effective."""
+    return jax.lax.optimization_barrier((e, l, a))
+
+
+@_pin.def_vmap
+def _pin_vmap(axis_size, in_batched, e, l, a):
+    return jax.lax.optimization_barrier((e, l, a)), tuple(in_batched)
+
+
 def make_objective(kind: str, area_constr_mm2: float = 150.0) -> Callable[[EvalResult], jnp.ndarray]:
     """Score (lower is better), +inf when infeasible."""
 
@@ -54,6 +69,53 @@ def make_objective(kind: str, area_constr_mm2: float = 150.0) -> Callable[[EvalR
 
 
 OBJECTIVES = ("ela", "edp", "e", "l")
+
+# the Pareto-front objective family (NSGA-II survival in core.ga): not a
+# scalar kind — requests select it with objective="pareto" and plan into
+# their own signature group (core.engine)
+PARETO = "pareto"
+
+# component order of the Pareto objective vector: (max_W E, max_W L, A)
+PARETO_AXES = ("e", "l", "a")
+N_PARETO = len(PARETO_AXES)
+
+
+def make_pareto_objective() -> Callable:
+    """Vector objective for Pareto-front search: per design the
+    minimization triple ``(max_W E, max_W L, A)`` with a *traced* area
+    constraint (a () float32 ctx leaf under vmap, so mixed-area requests
+    pack into one XLA program exactly like ``make_indexed_objective``).
+
+    Infeasible designs (doesn't fit / invalid / over area) get +inf on
+    EVERY component: they dominate nothing, are dominated by any feasible
+    design, and tie with each other — the vector twin of the scalar
+    families' +inf encoding.  The scalar proxy ``e*l*a`` of a feasible
+    row is bit-identical to the ``ela`` objective (same products, same
+    association), which is what convergence curves and NaN guards read."""
+
+    def score(r: EvalResult, area_constr: jnp.ndarray) -> jnp.ndarray:
+        # Barrier the metric triple BEFORE the NSGA-II consumers see it:
+        # the dominance pass broadcasts objs across the population dim
+        # (P x P), and without the barrier GSPMD answers that all-to-all
+        # consumer by resharding the upstream cost-model reductions —
+        # ULP-shifting E relative to the unsharded program (the same
+        # failure mode the trailing-stack note in make_indexed_objective
+        # documents).  The barrier pins e/l/a as standalone buffers, so
+        # the cost model compiles identically with and without a mesh.
+        e, l, a = _pin(_joint(r.energy_pj), _joint(r.latency_ns), r.area_mm2)
+        feasible = r.fits.all(axis=-1) & r.valid & (a <= area_constr)
+        objs = jnp.stack([e, l, a], axis=-1)  # (P, N_PARETO)
+        return jnp.where(feasible[..., None], objs, INF)
+
+    return score
+
+
+def pareto_scalar(objs: jnp.ndarray) -> jnp.ndarray:
+    """Scalar E*L*A proxy of a (..., N_PARETO) objective-vector array —
+    bit-identical to the ``ela`` objective on feasible rows, +inf on
+    infeasible (all-inf) rows.  Used for convergence curves, NaN guards
+    and the ``top_scores`` of Pareto results."""
+    return objs[..., 0] * objs[..., 1] * objs[..., 2]
 
 # exponents (w_E, w_L, w_A) reproducing each kind as E^wE * L^wL * A^wA
 OBJECTIVE_WEIGHTS: Dict[str, tuple] = {

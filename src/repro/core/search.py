@@ -113,6 +113,7 @@ def run_search(
     pop_size: int = 40,
     generations: int = 10,
     top_k: int = 10,
+    pareto_k: int = 10,
     init_genomes: Optional[jnp.ndarray] = None,
     tech: TechParams = TECH,
     backend: str = "jnp",
@@ -127,11 +128,15 @@ def run_search(
     bit-identical — it only changes the compiled program shape).
     ``pipelined`` pins the transfer-thin engine path: identical result
     fields, but ``result.ga`` is ``None`` (the history stays on device —
-    see ``SearchEngine``)."""
+    see ``SearchEngine``).  ``objective="pareto"`` switches to NSGA-II
+    front search: the result's ``top_*`` fields hold the ``pareto_k``
+    best front members in crowded order and ``objective_vectors`` their
+    per-member (E, L, A) triples."""
     req = SearchRequest(
         ws=ws, objective=objective, area_constr=float(area_constr),
         key=key, backend=backend, pop_size=int(pop_size),
-        generations=int(generations), top_k=int(top_k), tech=tech,
+        generations=int(generations), top_k=int(top_k),
+        pareto_k=int(pareto_k), tech=tech,
         init_genomes=init_genomes,
     )
     return _resolve_engine(engine, fused, pipelined).run([req])[0]
@@ -153,6 +158,7 @@ def batched_search(
     pop_size: int = 40,
     generations: int = 10,
     top_k: int = 10,
+    pareto_k: int = 10,
     init_genomes: Optional[jnp.ndarray] = None,
     tech: TechParams = TECH,
     backend: str = "jnp",
@@ -209,6 +215,7 @@ def batched_search(
             pop_size=int(pop_size),
             generations=int(generations),
             top_k=int(top_k),
+            pareto_k=int(pareto_k),
             tech=tech,
             init_genomes=None if init_genomes is None else init_genomes[b],
         )

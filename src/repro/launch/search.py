@@ -280,7 +280,18 @@ def main(argv=None) -> int:
     ap.add_argument("--lm-workloads", default="", help="assigned arch ids")
     ap.add_argument("--mode", default="decode", choices=["decode", "prefill"])
     ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--objective", default="ela")
+    ap.add_argument(
+        "--objective", default="ela",
+        help="scalar objective family (ela/edp/e/l) or 'pareto' for "
+             "NSGA-II front search: the result holds the --pareto-k best "
+             "non-dominated designs in crowded order with their per-member "
+             "(E, L, A) objective vectors",
+    )
+    ap.add_argument(
+        "--pareto-k", type=int, default=10, metavar="K",
+        help="--objective pareto: how many front members to return "
+             "(crowded order, decoded-cell-deduped)",
+    )
     ap.add_argument(
         "--backend", default="jnp", choices=["jnp", "pallas", "table"],
         help="cost-model evaluation backend: dense jnp oracle, the Pallas "
@@ -396,6 +407,7 @@ def main(argv=None) -> int:
         keys, ws,
         objective=args.objective, area_constr=args.area,
         pop_size=args.pop, generations=args.gens,
+        pareto_k=args.pareto_k,
         mesh=mesh, backend=args.backend, engine=engine,
         pipelined=args.pipelined or None,
     )
@@ -419,6 +431,15 @@ def main(argv=None) -> int:
             "convergence": [float(c) for c in res.convergence],
             "wall_s": dt,
         }
+        if res.objective_vectors is not None:
+            # pareto mode: the k front members' (E, L, A) trade-off triples
+            entry["pareto_front"] = [
+                {"E_pj": float(v[0]), "L_ns": float(v[1]), "A_mm2": float(v[2])}
+                for v in res.objective_vectors
+            ]
+            for j, v in enumerate(res.objective_vectors):
+                print(f"         front[{j}]: E={v[0]:.4g}pJ L={v[1]:.4g}ns "
+                      f"A={v[2]:.4g}mm2")
         if args.separate:
             key2 = jax.random.PRNGKey(seed + 1000)
             sep = separate_search(

@@ -7,8 +7,8 @@ full request — ``request_key`` is a sha256 over EVERYTHING that
 determines a search's result bits
 
     (workload fingerprint, tech constants, objective / exponent weights,
-     area constraint, backend, pop size, generations, top_k, the raw
-     PRNG key bytes, and any explicit init population)
+     area constraint, backend, pop size, generations, top_k, pareto_k,
+     the raw PRNG key bytes, and any explicit init population)
 
 and deliberately over nothing else: ``priority`` and ``deadline_s`` are
 scheduling metadata (they reorder launches, never change a result bit —
@@ -32,7 +32,10 @@ Only FULL results are cached: ``partial=True`` snapshots (deadline
 sweeps, quarantine, mid-search streams) are anytime views of an
 unfinished search, never a request's answer.  ``valid=False`` full-budget
 results (every design infeasible) ARE cached — re-searching cannot
-un-infeasible them.
+un-infeasible them.  Thin full results (``ga=None`` — what the pipelined
+engine and pareto requests produce) ARE cached too: they round-trip with
+an empty-history marker, so ``pipelined=True`` + ``result_cache``
+resolves a resubmitted drain with zero GA launches.
 
 Wired in two places (see ``core.engine.SearchEngine(result_cache=)`` and
 ``serve.dse.DSEService(result_cache=)``): the engine persists per-request
@@ -57,9 +60,13 @@ from repro.core.engine import SearchRequest, SearchResult
 from repro.core.ga import GAResult
 
 # fixed leaf layout of one serialized entry: jax.tree flattens dicts in
-# sorted-key order, so "arrays" (7 leaves, fixed order) precede "meta"
-_ARRAY_FIELDS = 7
+# sorted-key order, so "arrays" (8 leaves, fixed order) precede "meta".
+# Thin (ga=None) and non-pareto entries keep the SAME leaf count with
+# empty placeholder arrays — the layout never varies per entry, so
+# ``checkpoint.store.restore`` always sees one template.
+_ARRAY_FIELDS = 8
 _TEMPLATE = {"arrays": [0] * _ARRAY_FIELDS, "meta": 0}
+_EMPTY = np.zeros((0,), np.float32)
 
 
 def request_key(req: SearchRequest) -> str:
@@ -84,7 +91,7 @@ def request_key(req: SearchRequest) -> str:
     h.update(repr((
         req.objective, req.obj_weights, float(req.area_constr),
         req.backend, int(req.pop_size), int(req.generations),
-        int(req.top_k), req.tech,
+        int(req.top_k), int(req.pareto_k), req.tech,
     )).encode())
     h.update(np.asarray(req.prng_key()).tobytes())
     if req.init_genomes is not None:
@@ -96,18 +103,29 @@ def request_key(req: SearchRequest) -> str:
 
 def _encode(res: SearchResult) -> dict:
     """SearchResult -> a pytree of numpy leaves ``checkpoint.store`` can
-    write (non-array fields ride as a JSON byte leaf)."""
+    write (non-array fields ride as a JSON byte leaf).  Thin results
+    (``ga is None`` — the pipelined engine's full answers) serialize
+    empty placeholder leaves for the history fields and a ``thin`` meta
+    flag, so the leaf layout stays fixed; ``objective_vectors`` (pareto
+    fronts) rides the same way behind a ``vectors`` flag."""
+    thin = res.ga is None
+    vecs = res.objective_vectors
     meta = {
         "workload_names": list(res.workload_names),
         "objective": res.objective,
         "valid": bool(res.valid),
         "generations": int(res.generations),
+        "thin": thin,
+        "vectors": vecs is not None,
     }
     arrays = [
-        np.asarray(res.ga.genomes), np.asarray(res.ga.scores),
-        np.asarray(res.ga.best_genome), np.asarray(res.ga.best_score),
+        _EMPTY if thin else np.asarray(res.ga.genomes),
+        _EMPTY if thin else np.asarray(res.ga.scores),
+        _EMPTY if thin else np.asarray(res.ga.best_genome),
+        _EMPTY if thin else np.asarray(res.ga.best_score),
         np.asarray(res.top_scores), np.asarray(res.top_genomes),
         np.asarray(res.convergence),
+        _EMPTY if vecs is None else np.asarray(vecs),
     ]
     blob = np.frombuffer(json.dumps(meta).encode(), np.uint8)
     return {"arrays": arrays, "meta": blob}
@@ -115,7 +133,11 @@ def _encode(res: SearchResult) -> dict:
 
 def _decode(tree: dict) -> SearchResult:
     meta = json.loads(bytes(np.asarray(tree["meta"]).tobytes()).decode())
-    g, s, bg, bs, ts, tg, cv = tree["arrays"]
+    g, s, bg, bs, ts, tg, cv, ov = tree["arrays"]
+    ga = (
+        None if meta.get("thin")
+        else GAResult(genomes=g, scores=s, best_genome=bg, best_score=bs)
+    )
     # top_designs are a pure function of top_genomes — recomputed, not
     # serialized, so the dict form can never drift from the arrays
     designs: List[Dict[str, float]] = (
@@ -125,7 +147,7 @@ def _decode(tree: dict) -> SearchResult:
     return SearchResult(
         workload_names=tuple(meta["workload_names"]),
         objective=meta["objective"],
-        ga=GAResult(genomes=g, scores=s, best_genome=bg, best_score=bs),
+        ga=ga,
         top_designs=designs,
         top_scores=np.asarray(ts),
         top_genomes=np.asarray(tg),
@@ -133,6 +155,7 @@ def _decode(tree: dict) -> SearchResult:
         valid=bool(meta["valid"]),
         partial=False,
         generations=int(meta["generations"]),
+        objective_vectors=np.asarray(ov) if meta.get("vectors") else None,
     )
 
 
@@ -200,10 +223,13 @@ class ResultCache:
 
     def put(self, req_or_key: Union[SearchRequest, str],
             res: SearchResult) -> bool:
-        """Insert a FULL result; partial/never-launched results are
-        refused (returns False) — an anytime snapshot must never shadow
-        the request's real answer."""
-        if res.partial or res.ga is None:
+        """Insert a FULL result; ``partial=True`` snapshots are refused
+        (returns False) — an anytime snapshot must never shadow the
+        request's real answer.  Thin full results (``ga is None``, the
+        pipelined engine's complete answers) ARE cached: their top-k /
+        convergence / vector fields are the whole deliverable, and the
+        history was never materialized to begin with."""
+        if res.partial:
             return False
         key = self._as_key(req_or_key)
         with self._lock:

@@ -323,6 +323,15 @@ class DSEService:
         )
         self.policy = get_policy(policy)
         self.clock = clock
+        # wall-clock aging horizon (PriorityPolicy only): a cached plan
+        # list is ordered by priorities computed at build time, so once
+        # ``aging_s`` passes, some queued request has earned a promotion
+        # the cache cannot reflect — ``_dispatch`` invalidates and
+        # re-plans (on the warm slot hints: zero new compiled programs).
+        # Without this, aging only applied when a submit happened to
+        # land, and a busy drain could starve an aged request forever.
+        self._aging_s: Optional[float] = getattr(self.policy, "aging_s", None)
+        self._plans_built_s: float = 0.0
         self.retry = retry
         self.partial_results = bool(partial_results)
         self._sleep = time.sleep if sleep is None else sleep
@@ -415,6 +424,7 @@ class DSEService:
         warm program shapes."""
         if self._plans_cache is None:
             now = self.clock()
+            self._plans_built_s = now
             self._snapshot = list(self.queue)
             meta = [
                 RequestMeta(
@@ -458,6 +468,13 @@ class DSEService:
             return plan, [e.rid], now
         if not self.queue:
             return None
+        if (self._plans_cache is not None and self._aging_s is not None
+                and now - self._plans_built_s >= self._aging_s):
+            # aging re-plan: the cached plan order is >= aging_s old, so
+            # wait-time promotions have accrued that it cannot reflect —
+            # rebuild with fresh wait_s (see __init__; starvation-freedom
+            # is pinned on the virtual clock in tests/test_scheduler_sim.py)
+            self._plans_cache = None
         plans = self._plans()
         plan = plans.pop(0)
         if not plans:

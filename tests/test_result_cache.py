@@ -361,6 +361,69 @@ def test_identical_resubmit_zero_launches_sync_and_async(ws):
         _assert_bit_equal(cold[r1], res, f"async rid {r1}")
 
 
+def _assert_thin_bit_equal(a, b, ctx=""):
+    """Bit-equality for transfer-thin full results (``ga is None``)."""
+    assert a.ga is None and b.ga is None, ctx
+    assert a.objective == b.objective and a.workload_names == b.workload_names
+    assert a.valid == b.valid and not a.partial and not b.partial
+    assert a.generations == b.generations
+    assert a.top_designs == b.top_designs, ctx
+    for name in ("top_scores", "top_genomes", "convergence"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=f"{ctx}: {name}")
+
+
+def test_thin_full_results_are_cacheable_partials_still_refused(ws):
+    """THE regression (ISSUE 10 headline): pipelined engines return thin
+    FULL results (``res.ga is None``), and ``ResultCache.put`` used to
+    refuse exactly those — so a pipelined service never populated its
+    cache and every resubmit re-ran the GA.  Thin full results now cache;
+    partial snapshots (``res.partial``) stay refused."""
+    req = _reqs(ws, 1, seed0=500)[0]
+    thin = SearchEngine(pipelined=True).run([req])[0]
+    assert thin.ga is None and not thin.partial
+    cache = ResultCache()
+    assert cache.put(req, thin) is True
+    assert cache.get(req) is thin
+    assert cache.put(req, empty_partial_result(req)) is False
+
+
+def test_pipelined_resubmit_drain_zero_launches_bit_identical(ws):
+    """Acceptance: a 32-request mix drained through a pipelined engine
+    with a result cache, resubmitted identically, resolves with ZERO new
+    GA launches, bit-identical thin results, and a positive hit rate."""
+    cache = ResultCache(capacity=64)
+    eng = SearchEngine(pipelined=True)
+    svc = DSEService(engine=eng, result_cache=cache)
+    rids = svc.submit_all(_reqs(ws, 32, seed0=600))
+    cold = dict(svc.drain())
+    launches = eng.launches
+    assert launches > 0 and cache.stats.puts == 32
+
+    rids2 = svc.submit_all(_reqs(ws, 32, seed0=600))
+    hot = dict(svc.drain())
+    assert eng.launches == launches, "resubmit burned GA launches"
+    assert svc.stats.cache_hits == 32
+    assert cache.stats.hit_rate() > 0
+    for r1, r2 in zip(rids, rids2):
+        _assert_thin_bit_equal(cold[r1], hot[r2], f"rid {r1}->{r2}")
+
+
+def test_thin_entry_disk_round_trip(tmp_path, ws):
+    """A thin full result survives the disk tier across a process
+    'restart' with ``ga`` still None and designs recomputed, not drifted."""
+    req = _reqs(ws, 1, seed0=510)[0]
+    thin = SearchEngine(pipelined=True).run([req])[0]
+    c1 = ResultCache(disk_dir=tmp_path / "rc")
+    assert c1.put(req, thin)
+    c2 = ResultCache(disk_dir=tmp_path / "rc")  # fresh process
+    back = c2.get(req)
+    assert back is not None and back is not thin
+    assert c2.stats.disk_hits == 1
+    _assert_thin_bit_equal(back, thin, "thin disk roundtrip")
+
+
 # ---------------------------------------------------------------- streaming
 def test_streamed_snapshots_monotone_and_prefix_of_history(ws):
     reqs = _reqs(ws, 2, seed0=40)

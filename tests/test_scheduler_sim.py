@@ -112,6 +112,77 @@ def test_priority_without_aging_starves():
 
 
 # ----------------------------------------------------- deadline accounting
+def test_aging_replan_fires_on_stale_plan_cache():
+    """The wall-clock aging trigger (ROADMAP gap): once a cached plan
+    list is >= aging_s old, the next dispatch re-runs plan_batch with
+    fresh wait_s instead of consuming the stale order — without a submit
+    having to land.  The re-plan runs on the warm slot hints: the launch
+    shape multiset is untouched (zero new compiled programs)."""
+    svc, clock, stub = sim_service(
+        policy=PriorityPolicy(aging_s=2.0), max_slots=1, launch_s=1.0
+    )
+    submit_burst(svc, 4, priorities=(3,))
+    svc.step()  # builds + caches plans at t=0, consumes one
+    built0 = svc._plans_built_s
+    assert built0 == 0.0 and svc._plans_cache is not None
+    clock.advance(5.0)  # > aging_s with NO submit landing
+    svc.step()
+    assert svc._plans_built_s >= 5.0, "stale plan cache was not re-planned"
+    svc.drain()
+    # scheduling-only: every request completes, and every launch reused
+    # the one warm (signature, slots) shape — the re-plan compiled nothing
+    assert svc.stats.completed == 4
+    assert len({(l.signature, l.slots) for l in stub.launches}) == 1
+
+
+def test_aging_replan_starvation_free_without_submit_triggers():
+    """Starvation-freedom in REAL time, not just at submit boundaries: a
+    priority-9 request outlives a saturating priority-0 backlog even when
+    later rounds only advance the clock and step (no fresh submissions to
+    invalidate the plan cache) — the aging re-plan trigger keeps the
+    promotions applied.  Zero new compiled programs throughout."""
+    svc, clock, stub = sim_service(
+        policy=PriorityPolicy(aging_s=2.0), max_slots=4, launch_s=1.0
+    )
+    starved = svc.submit(sim_request(-1, priority=9))
+    # saturating phase: fresh priority-0 bursts keep the queue hot
+    for round_ in range(4):
+        submit_burst(svc, 4, priorities=(0,), seed0=100 * round_)
+        svc.step()
+    # quiet phase: the clock runs, steps land, nothing is submitted —
+    # the old code would consume the stale cached order here forever
+    done_at = None
+    for _ in range(30):
+        if not svc.pending():
+            break
+        clock.advance(1.0)
+        for rid, _res in svc.step():
+            if rid == starved and done_at is None:
+                done_at = clock()
+    assert done_at is not None, "aged request never launched: starvation"
+    assert done_at <= 40.0
+    assert svc.stats.completed == 17
+    assert len({(l.signature, l.slots) for l in stub.launches}) == 1
+
+
+def test_aging_replan_disabled_without_aging():
+    """aging_s=None (and fifo/edf) must never trip the staleness check —
+    the cached plan list survives arbitrary clock advances untouched."""
+    for policy in (PriorityPolicy(aging_s=None), "fifo", "edf"):
+        svc, clock, stub = sim_service(policy=policy, max_slots=1)
+        assert svc._aging_s is None
+        submit_burst(svc, 3)
+        svc.step()
+        cached = svc._plans_cache
+        assert cached is not None
+        clock.advance(1000.0)
+        svc.step()
+        assert svc._plans_built_s == 0.0  # never rebuilt
+        svc.drain()
+        assert svc.stats.completed == 3
+
+
+# ----------------------------------------------------- deadline accounting
 def test_deadline_miss_accounting_exact():
     svc, clock, stub = sim_service(policy="edf", max_slots=1, launch_s=2.0)
     trace = run_script(svc, clock, [

@@ -373,3 +373,49 @@ def test_fused_trivial_mesh_parity(ws):
                         backend="table", fused=True, mesh=mesh)
     for r, s in zip(ref, sh):
         _assert_results_equal(r, s)
+
+
+# ------------------------------------------------------ pareto front search
+def _assert_pareto_equal(a, b):
+    """Pareto results: front membership, (E, L, A) vectors and the
+    convergence curve must all be mesh-invariant bit-for-bit."""
+    np.testing.assert_array_equal(a.top_scores, b.top_scores)
+    np.testing.assert_array_equal(a.top_genomes, b.top_genomes)
+    np.testing.assert_array_equal(a.objective_vectors, b.objective_vectors)
+    np.testing.assert_array_equal(a.convergence, b.convergence)
+    assert a.top_designs == b.top_designs
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("searches,pop", MESH_LAYOUTS)
+def test_pareto_search_sharded_parity(ws, searches, pop):
+    """NSGA-II front search over the fake-8-device mesh: the in-jit
+    non-dominated sort, crowding passes and front epilogue are all plain
+    lax ops over placed leaves, so every mesh layout must return the
+    meshless front bit-for-bit (table backend, mixed per-element areas)."""
+    mesh = make_search_mesh(searches, pop)
+    B = 8
+    keys = jnp.stack([jax.random.PRNGKey(500 + i) for i in range(B)])
+    feats = jnp.broadcast_to(ws.feats[None], (B,) + ws.feats.shape)
+    mask = jnp.broadcast_to(ws.mask[None], (B,) + ws.mask.shape)
+    kw = dict(pop_size=POP, generations=GENS, backend="table",
+              objective="pareto", pareto_k=5)
+    ref = batched_search(keys, feats, mask, **kw)
+    sh = batched_search(keys, feats, mask, mesh=mesh, **kw)
+    for r, s in zip(ref, sh):
+        _assert_pareto_equal(r, s)
+
+
+def test_pareto_trivial_mesh_parity(ws):
+    """Single-device envelope of the pareto x mesh cross (tier-1)."""
+    mesh = make_search_mesh(1, 1)
+    B = 2
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(B)])
+    feats = jnp.broadcast_to(ws.feats[None], (B,) + ws.feats.shape)
+    mask = jnp.broadcast_to(ws.mask[None], (B,) + ws.mask.shape)
+    kw = dict(pop_size=8, generations=2, backend="table",
+              objective="pareto", pareto_k=4)
+    ref = batched_search(keys, feats, mask, **kw)
+    sh = batched_search(keys, feats, mask, mesh=mesh, **kw)
+    for r, s in zip(ref, sh):
+        _assert_pareto_equal(r, s)

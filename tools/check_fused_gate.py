@@ -17,6 +17,13 @@ bench-smoke / perf-smoke legs just before this runs) and fails when
     over thin bytes/launch, measured in the same job) dropped under
     10x — the transfer-thin contract itself.
 
+With ``--cache`` the gate instead checks the ``cache`` row's
+``pipelined_resubmit`` record (written by ``bench_dse_service --cache``):
+a pipelined engine's thin full results must populate the result cache,
+so the identical resubmitted mix drains with ZERO new GA launches and a
+positive hit rate — the ISSUE-10 thin-result caching fix.  The
+``cache-smoke`` CI leg runs this mode right after recording the row.
+
 Comparing rows measured on the SAME host in the SAME job keeps the gate
 meaningful on throttled CI runners where an absolute designs/s floor
 would flake.  The pipelined checks only engage when the row exists, so
@@ -35,12 +42,47 @@ EXP = Path(__file__).resolve().parents[1] / "experiments"
 MIN_TRANSFER_REDUCTION_X = 10.0
 
 
-def main() -> int:
+def check_cache(data: dict) -> int:
+    """The pipelined/cache gate: thin-result caching keeps resubmits free."""
+    row = data.get("cache")
+    if row is None:
+        print("[fused-gate] --cache: no 'cache' row recorded — run "
+              "bench_dse_service --cache first")
+        return 1
+    sub = row.get("pipelined_resubmit")
+    if sub is None:
+        print("[fused-gate] --cache: 'cache' row predates the pipelined-"
+              "resubmit record — re-run bench_dse_service --cache")
+        return 1
+    launches = sub.get("new_launches")
+    hit_rate = sub.get("hit_rate")
+    if launches is None or hit_rate is None:
+        print(f"[fused-gate] --cache: incomplete pipelined_resubmit record "
+              f"(new_launches={launches}, hit_rate={hit_rate})")
+        return 1
+    if launches != 0:
+        print(f"[fused-gate] REGRESSION: pipelined resubmit launched "
+              f"{launches} new GA runs (thin results not cached?) over "
+              f"{sub.get('requests')} requests")
+        return 1
+    if hit_rate <= 0:
+        print(f"[fused-gate] REGRESSION: pipelined resubmit hit rate "
+              f"{hit_rate} (cache never hit)")
+        return 1
+    print(f"[fused-gate] ok: pipelined resubmit x{sub.get('requests')} "
+          f"drained with 0 new launches, hit rate {hit_rate:.2f}")
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
     path = EXP / "search_throughput.json"
     if not path.exists():
         print(f"[fused-gate] {path} missing — run the bench first")
         return 1
     data = json.loads(path.read_text())
+    if "--cache" in argv:
+        return check_cache(data)
     fused = data.get("fused", {}).get("designs_per_s")
     table = data.get("table", {}).get("separate", {}).get("designs_per_s")
     if fused is None or table is None:

@@ -44,8 +44,16 @@
 #                                  # streaming test suite, then an
 #                                  # identical paper mix resubmitted
 #                                  # through a cache-armed service (sync
-#                                  # + async) — zero new GA launches,
-#                                  # bit-identical results
+#                                  # + async + PIPELINED thin-result
+#                                  # engine) — zero new GA launches,
+#                                  # bit-identical results; records the
+#                                  # 'cache' row and gates its pipelined-
+#                                  # resubmit record (launches == 0)
+#   bash tools/ci.sh pareto-smoke  # Pareto-front gate: the NSGA-II
+#                                  # numpy-oracle parity suite
+#                                  # (tests/test_pareto.py) and a quick
+#                                  # pareto bench recording the 'pareto'
+#                                  # row of search_throughput.json
 #
 # The scheduler-sim suite (tests/test_scheduler_sim.py) is part of the
 # plain pytest run, so it executes in BOTH the tier-1 (1-device) and
@@ -66,6 +74,7 @@ elif [[ "${1:-}" == "bench-smoke" ]]; then
   python -m benchmarks.bench_search_throughput --quick --backend table
   python -m benchmarks.bench_search_throughput --quick --fused --grid-density 1,2
   python -m benchmarks.bench_search_throughput --quick --pipelined
+  python -m benchmarks.bench_search_throughput --quick --pareto
   python -m benchmarks.bench_dse_service --quick
   python -m tools.check_fused_gate
 elif [[ "${1:-}" == "perf-smoke" ]]; then
@@ -82,6 +91,11 @@ elif [[ "${1:-}" == "fault-smoke" ]]; then
 elif [[ "${1:-}" == "cache-smoke" ]]; then
   python -m pytest -x -q tests/test_result_cache.py
   python -m benchmarks.bench_dse_service --cache-smoke
+  python -m benchmarks.bench_dse_service --cache --quick
+  python -m tools.check_fused_gate --cache
+elif [[ "${1:-}" == "pareto-smoke" ]]; then
+  python -m pytest -x -q tests/test_pareto.py
+  python -m benchmarks.bench_search_throughput --quick --pareto
 else
   python -m pytest -x -q
   python -m benchmarks.run --quick
